@@ -1,0 +1,105 @@
+"""Render the §Roofline / §Dry-run markdown tables from
+experiments/dryrun/*.json.
+
+Run: PYTHONPATH=src python -m benchmarks.roofline_table [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob("experiments/dryrun/*.json")):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "bound | useful/HLO | note |\n"
+           "|---|---|---:|---:|---:|---|---:|---|")
+    rows = [hdr]
+    for r in recs:
+        if not r.get("applicable", True):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                        f"| — | {r.get('skip_reason', '')[:60]} |")
+            continue
+        if "roofline" not in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | ERROR "
+                        f"| — | {r.get('error', '')[:60]} |")
+            continue
+        t = r["roofline"]
+        note = _note(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.1f} | "
+            f"{t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} | "
+            f"{r['bottleneck'][:-2]} | {r['useful_flops_ratio']:.2f} | "
+            f"{note} |")
+    return "\n".join(rows)
+
+
+def _note(r: Dict) -> str:
+    t = r["roofline"]
+    b = r["bottleneck"]
+    if b == "memory_s":
+        return ("cut f32 boundaries / fuse (TPU fuses tighter than the "
+                "CPU-granularity estimate)")
+    if b == "collective_s":
+        ar = r.get("collectives", {}).get("all-reduce", {})
+        return (f"all-reduce {ar.get('bytes', 0)/2**30:.1f}GiB: "
+                "reduce-scatter/SP or 2D-sharded collectives")
+    return "increase per-chip batch or reduce remat recompute"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    hdr = ("| arch | shape | compile (s) | args GiB/dev | temp GiB/dev | "
+           "HLO TFLOP/dev | HBM GiB/dev | coll GiB/dev | coll ops |\n"
+           "|---|---|---:|---:|---:|---:|---:|---:|---|")
+    rows = [hdr]
+    for r in recs:
+        if not r.get("applicable", True) or "cost" not in r:
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {})
+        nops = {k: v["count"] for k, v in coll.items()}
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s', 0):.0f} | "
+            f"{fmt_bytes(mem.get('argument_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_bytes', 0))} | "
+            f"{r['cost']['device_flops']/1e12:.1f} | "
+            f"{fmt_bytes(r['cost']['device_bytes'])} | "
+            f"{fmt_bytes(r.get('collective_bytes', 0))} | {nops} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    if not recs:
+        print(f"no records for mesh {args.mesh}")
+        return
+    print(roofline_table(recs) if args.kind == "roofline"
+          else dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

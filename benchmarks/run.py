@@ -1,0 +1,318 @@
+"""Benchmark harness — one function per paper table/figure + kernel/system
+micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+Paper mapping:
+- table1_generalization_gap  -> Table 1 (SB/LB/+LR/+GBN/+RA val accuracy),
+  reduced-scale synthetic analogue (Table 2 is the same protocol on
+  ImageNet/Alexnet — data-gated, covered by the same code path).
+- figure1_batch_size_error   -> Figure 1 (error vs batch size).
+- figure2_weight_distance    -> Figure 2 (log-t weight distance + fits).
+- appendixB_random_potential -> Appendix B (loss std vs distance).
+- kernel_*                   -> Pallas kernels vs jnp oracles (CPU interpret).
+- lm_train_step              -> reduced-LM step throughput with the recipe.
+- roofline_from_dryrun       -> reads experiments/dryrun/*.json (§Roofline).
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _timeit(fn: Callable, *args, reps: int = 5) -> float:
+    fn(*args)                      # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+
+def kernel_gbn(quick: bool) -> None:
+    from repro.kernels import ops, ref
+    G, R, C = (4, 512, 128) if quick else (8, 2048, 256)
+    x = jax.random.normal(jax.random.PRNGKey(0), (G, R, C))
+    gamma = jnp.ones((C,))
+    beta = jnp.zeros((C,))
+    f_ref = jax.jit(lambda a: ref.gbn_ref(a, gamma, beta)[0])
+    f_ker = jax.jit(lambda a: ops.gbn_forward(a, gamma, beta)[0])
+    t_ref = _timeit(f_ref, x)
+    t_ker = _timeit(f_ker, x)
+    err = float(jnp.abs(f_ref(x) - f_ker(x)).max())
+    emit("kernel_gbn_ref", t_ref, f"shape={G}x{R}x{C}")
+    emit("kernel_gbn_pallas_interp", t_ker, f"max_err={err:.1e}")
+
+
+def kernel_flash_attention(quick: bool) -> None:
+    from repro.kernels import ops, ref
+    B, H, KV, S, hd = (1, 4, 2, 256, 64) if quick else (2, 8, 4, 1024, 64)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, hd))
+    f_ref = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True))
+    f_ker = jax.jit(lambda a, b, c: ops.flash_attention_hm(a, b, c,
+                                                           causal=True))
+    t_ref = _timeit(f_ref, q, k, v, reps=3)
+    t_ker = _timeit(f_ker, q, k, v, reps=3)
+    err = float(jnp.abs(f_ref(q, k, v) - f_ker(q, k, v)).max())
+    emit("kernel_flash_ref", t_ref, f"S={S}")
+    emit("kernel_flash_pallas_interp", t_ker, f"max_err={err:.1e}")
+
+
+def kernel_mamba(quick: bool) -> None:
+    from repro.kernels import ops, ref
+    B, c, di, ds = (2, 64, 512, 16) if quick else (4, 256, 1024, 16)
+    rng = jax.random.PRNGKey(0)
+    xc = jax.random.normal(rng, (B, c, di))
+    dt = 0.1 * jax.nn.softplus(jax.random.normal(rng, (B, c, di)))
+    Bm = jax.random.normal(rng, (B, c, ds))
+    Cm = jax.random.normal(rng, (B, c, ds))
+    A = -jnp.abs(jax.random.normal(rng, (di, ds)))
+    h0 = jnp.zeros((B, di, ds))
+    f_ref = jax.jit(lambda *a: ref.mamba_chunk_ref(*a)[0])
+    f_ker = jax.jit(lambda *a: ops.mamba_chunk(*a)[0])
+    t_ref = _timeit(f_ref, xc, dt, Bm, Cm, A, h0, reps=3)
+    t_ker = _timeit(f_ker, xc, dt, Bm, Cm, A, h0, reps=3)
+    emit("kernel_mamba_ref", t_ref, f"c={c},di={di}")
+    emit("kernel_mamba_pallas_interp", t_ker, "")
+
+
+# ---------------------------------------------------------------------------
+# paper tables / figures
+# ---------------------------------------------------------------------------
+
+
+def _vision_setup(quick: bool):
+    from repro.configs.paper_models import F1_MNIST
+    from repro.data.synthetic import teacher_classification
+    cfg = dataclasses.replace(
+        F1_MNIST, input_shape=(8, 8, 1),
+        hidden_sizes=(96, 96) if quick else (192, 192, 192),
+        ghost_batch_size=16)
+    data = teacher_classification(
+        7, n_train=2048 if quick else 6144, n_test=1024,
+        input_shape=(8, 8, 1), n_classes=10, label_noise=0.05)
+    return cfg, data
+
+
+def table1_generalization_gap(quick: bool) -> None:
+    """SB / LB / LB+LR / LB+LR+GBN / LB+LR+GBN+RA validation accuracy."""
+    from repro.core import Regime, presets
+    from repro.models.cnn import model_fns
+    from repro.train.trainer import train_vision
+    cfg, data = _vision_setup(quick)
+    # batch ratio 32 (paper: 128 -> 4096); figure1 locates the gap onset
+    # for this task at batch ~1024
+    small_steps = 300 if quick else 2400
+    small = Regime(base_lr=0.08, total_steps=small_steps,
+                   drop_every=small_steps // 3, drop_factor=0.2)
+    cols = presets(large_batch=1024, small_batch=32, ghost=16)
+    t0 = time.perf_counter()
+    accs = {}
+    for name, lb in cols.items():
+        regime = lb.build_regime(small)
+        out = train_vision(model_fns(cfg), cfg, data, lb, regime, seed=5,
+                           track_diffusion=False)
+        accs[name] = out["final_acc"]
+    dt = (time.perf_counter() - t0) * 1e6
+    derived = ";".join(f"{k}={v:.4f}" for k, v in accs.items())
+    emit("table1_generalization_gap", dt / len(cols), derived)
+
+
+def figure1_batch_size_error(quick: bool) -> None:
+    """Validation error vs batch size (constant epoch budget, no fixes)."""
+    from repro.core import LargeBatchConfig, Regime
+    from repro.models.cnn import model_fns
+    from repro.train.trainer import train_vision
+    cfg, data = _vision_setup(quick)
+    batches = [32, 128, 512] if quick else [32, 64, 128, 256, 512, 1024]
+    epochs_steps = 300 if quick else 1200  # at batch 64
+    t0 = time.perf_counter()
+    errs = {}
+    for bs in batches:
+        lb = LargeBatchConfig(batch_size=bs, base_batch_size=bs,
+                              lr_rule="none", use_gbn=False,
+                              regime_adaptation=False, grad_clip=0.0)
+        steps = max(10, epochs_steps * 64 // bs)
+        regime = Regime(base_lr=0.08, total_steps=steps,
+                        drop_every=max(1, steps // 3))
+        out = train_vision(model_fns(cfg), cfg, data, lb, regime, seed=5,
+                           track_diffusion=False)
+        errs[bs] = 1.0 - out["final_acc"]
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("figure1_batch_size_error", dt / len(batches),
+         ";".join(f"b{k}={v:.4f}" for k, v in errs.items()))
+
+
+def figure2_weight_distance(quick: bool) -> None:
+    """||w_t - w_0|| ~ log t during the initial high-LR phase, per batch."""
+    from repro.core import LargeBatchConfig, Regime
+    from repro.models.cnn import model_fns
+    from repro.train.trainer import train_vision
+    cfg, data = _vision_setup(quick)
+    batches = [64, 256] if quick else [32, 128, 512]
+    steps = 200 if quick else 600
+    t0 = time.perf_counter()
+    fits = {}
+    for bs in batches:
+        lb = LargeBatchConfig(batch_size=bs, base_batch_size=bs,
+                              grad_clip=0.0)
+        regime = Regime(base_lr=0.08, total_steps=steps, drop_every=10**9)
+        out = train_vision(model_fns(cfg), cfg, data, lb, regime, seed=5)
+        fits[bs] = out["log_fit"]
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("figure2_weight_distance", dt / len(batches),
+         ";".join(f"b{k}:slope={v['slope']:.3f},r2={v['r2']:.3f}"
+                  for k, v in fits.items()))
+
+
+def appendixB_random_potential(quick: bool) -> None:
+    """std(L(w)-L(w0)) vs ||w-w0|| on random rays from init."""
+    from repro.core.diffusion import random_potential_probe
+    from repro.models.cnn import model_fns
+    cfg, data = _vision_setup(True)
+    init_fn, apply_fn = model_fns(cfg)
+    params, state = init_fn(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(data.x_train[:256])
+    y = jnp.asarray(data.y_train[:256])
+
+    @jax.jit
+    def loss(p):
+        logits, _ = apply_fn(p, state, cfg, x, training=True,
+                             use_gbn=False)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    t0 = time.perf_counter()
+    out = random_potential_probe(loss, params, jax.random.PRNGKey(1),
+                                 n_samples=60 if quick else 200,
+                                 max_radius=10.0, n_bins=6)
+    dt = (time.perf_counter() - t0) * 1e6
+    d, s = out["distance"], out["loss_std"]
+    corr = float(np.corrcoef(d, s)[0, 1]) if len(d) > 2 else float("nan")
+    emit("appendixB_random_potential", dt,
+         f"linear_corr={corr:.3f};bins={len(d)}")
+
+
+# ---------------------------------------------------------------------------
+# system
+# ---------------------------------------------------------------------------
+
+
+def lm_train_step(quick: bool) -> None:
+    from repro.configs.registry import get_config
+    from repro.core import LargeBatchConfig, Regime
+    from repro.models import transformer as T
+    from repro.optim import sgd
+    from repro.train.trainer import make_lm_train_step
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    B, S = (4, 64) if quick else (8, 128)
+    lb = LargeBatchConfig(batch_size=B, base_batch_size=B, grad_clip=1.0)
+    regime = Regime(base_lr=0.01, total_steps=100, drop_every=100)
+    step = jax.jit(make_lm_train_step(cfg, lb, regime))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = sgd.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+
+    us = _timeit(lambda: step(params, opt, batch, jnp.int32(0),
+                              jax.random.PRNGKey(0))[2]["loss"], reps=3)
+    toks = B * S
+    emit("lm_train_step_reduced", us, f"tok_per_s={toks / (us / 1e6):.0f}")
+
+
+def serve_decode_step(quick: bool) -> None:
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.serving import make_serve_step
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    B, S = (4, 256) if quick else (16, 1024)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32)
+    step = jax.jit(make_serve_step(cfg))
+    tok = jnp.zeros((B, 1), jnp.int32)
+
+    us = _timeit(lambda: step(params, cache, tok, jnp.int32(S // 2))[0],
+                 reps=5)
+    emit("serve_decode_step_reduced", us,
+         f"tok_per_s={B / (us / 1e6):.0f};cache={S}")
+
+
+def roofline_from_dryrun(quick: bool) -> None:
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        emit("roofline_from_dryrun", 0.0, "no dryrun records; run "
+             "python -m repro.launch.dryrun --all first")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        if "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        emit(f"roofline[{rec['arch']}|{rec['shape']}|{rec['mesh']}]",
+             r[rec["bottleneck"]] * 1e6,
+             f"compute={r['compute_s']*1e3:.1f}ms;"
+             f"memory={r['memory_s']*1e3:.1f}ms;"
+             f"collective={r['collective_s']*1e3:.1f}ms;"
+             f"bound={rec['bottleneck'][:-2]};"
+             f"useful={rec.get('useful_flops_ratio', 0):.2f}")
+
+
+BENCHES: Dict[str, Callable] = {
+    "kernel_gbn": kernel_gbn,
+    "kernel_flash_attention": kernel_flash_attention,
+    "kernel_mamba": kernel_mamba,
+    "table1_generalization_gap": table1_generalization_gap,
+    "figure1_batch_size_error": figure1_batch_size_error,
+    "figure2_weight_distance": figure2_weight_distance,
+    "appendixB_random_potential": appendixB_random_potential,
+    "lm_train_step": lm_train_step,
+    "serve_decode_step": serve_decode_step,
+    "roofline_from_dryrun": roofline_from_dryrun,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / few steps (CI mode)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name](args.quick)
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(ROWS) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Sharding-aware npz checkpointing.
+
+Parameters/optimizer pytrees are flattened to path-keyed arrays; on restore
+the arrays are placed back with the caller-provided shardings (device_put
+with a NamedSharding reshards transparently)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, step: int, params: Any, opt_state: Any = None,
+         extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, f"params_{step}.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, f"opt_{step}.npz"), **_flatten(opt_state))
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(path, f"meta_{step}.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(path, "latest"), "w") as f:
+        f.write(str(step))
+
+
+def latest_step(path: str) -> Optional[int]:
+    p = os.path.join(path, "latest")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(path: str, template: Any, *, step: Optional[int] = None,
+            kind: str = "params", shardings: Any = None) -> Tuple[Any, int]:
+    """Restore a pytree shaped like ``template``. Returns (tree, step)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    fname = os.path.join(path, f"{'params' if kind == 'params' else 'opt'}"
+                         f"_{step}.npz")
+    data = np.load(fname)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in flat_t:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step

@@ -1,0 +1,9 @@
+from repro.configs.base import (EncoderConfig, InputShape, INPUT_SHAPES,
+                                LayerSpec, ModelConfig, MoEConfig, NormConfig,
+                                SSMConfig, VisionStubConfig, shape_applicable)
+
+__all__ = [
+    "EncoderConfig", "InputShape", "INPUT_SHAPES", "LayerSpec", "ModelConfig",
+    "MoEConfig", "NormConfig", "SSMConfig", "VisionStubConfig",
+    "shape_applicable",
+]

@@ -1,0 +1,70 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Maps the assigned (dashed) architecture ids to their ModelConfig.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                shape_applicable)
+from repro.configs import (falcon_mamba_7b, gemma3_27b, h2o_danube_3_4b,
+                           jamba_v01_52b, kimi_k2_1t_a32b,
+                           llama_3_2_vision_11b, phi3_medium_14b,
+                           qwen2_moe_a27b, qwen3_1_7b, seamless_m4t_large_v2)
+from repro.configs.paper_models import PAPER_MODELS
+
+_ARCHS: Dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in (
+        kimi_k2_1t_a32b.CONFIG,
+        falcon_mamba_7b.CONFIG,
+        gemma3_27b.CONFIG,
+        jamba_v01_52b.CONFIG,
+        seamless_m4t_large_v2.CONFIG,
+        qwen2_moe_a27b.CONFIG,
+        qwen3_1_7b.CONFIG,
+        llama_3_2_vision_11b.CONFIG,
+        phi3_medium_14b.CONFIG,
+        h2o_danube_3_4b.CONFIG,
+    )
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch.endswith("-reduced"):
+        return get_config(arch[: -len("-reduced")]).reduced()
+    if arch not in _ARCHS:
+        raise KeyError(
+            f"unknown arch {arch!r}; available: {sorted(_ARCHS)}")
+    return _ARCHS[arch]
+
+
+def list_archs() -> List[str]:
+    return sorted(_ARCHS)
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {name!r}; available: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]
+
+
+def list_shapes() -> List[str]:
+    return sorted(INPUT_SHAPES)
+
+
+def combos(include_inapplicable: bool = False):
+    """Yield (arch, shape, applicable, reason) for the 10x4 assignment grid."""
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            ok, reason = shape_applicable(cfg, shape)
+            if ok or include_inapplicable:
+                yield arch, sname, ok, reason
+
+
+__all__ = [
+    "get_config", "list_archs", "get_shape", "list_shapes", "combos",
+    "PAPER_MODELS",
+]

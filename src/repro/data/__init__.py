@@ -1,0 +1,9 @@
+from repro.data.pipeline import epoch_batches, minibatch_stream, shard_batch
+from repro.data.synthetic import (ClassificationData, lm_sequences,
+                                  teacher_classification, token_lm)
+
+__all__ = [
+    "epoch_batches", "minibatch_stream", "shard_batch",
+    "ClassificationData", "lm_sequences", "teacher_classification",
+    "token_lm",
+]

@@ -1,0 +1,32 @@
+"""Batching pipeline: epoch-shuffled minibatch iterators and device
+placement helpers."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def epoch_batches(rng: np.random.RandomState, n: int, batch_size: int,
+                  drop_remainder: bool = True) -> Iterator[np.ndarray]:
+    """Yield index arrays for one epoch."""
+    perm = rng.permutation(n)
+    end = n - n % batch_size if drop_remainder else n
+    for i in range(0, end, batch_size):
+        yield perm[i:i + batch_size]
+
+
+def minibatch_stream(rng_seed: int, n: int, batch_size: int
+                     ) -> Iterator[np.ndarray]:
+    """Infinite stream of shuffled minibatch index arrays."""
+    rng = np.random.RandomState(rng_seed)
+    while True:
+        yield from epoch_batches(rng, n, batch_size)
+
+
+def shard_batch(batch: Dict[str, jax.Array], sharding) -> Dict[str, jax.Array]:
+    """Place a host batch onto the mesh with the given NamedSharding."""
+    return jax.tree.map(
+        lambda a: jax.device_put(a, sharding), batch)

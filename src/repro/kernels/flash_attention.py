@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (streaming softmax), with causal masking,
+sliding-window support and GQA.
+
+TPU-native design: the grid is (B, H, n_q_blocks, n_kv_blocks) — TPU iterates
+the last grid axis sequentially per core, so the running max / normalizer /
+accumulator live in VMEM scratch across kv steps and the output block is
+written once on the final kv step. KV blocks that are entirely masked
+(beyond causal frontier or older than the window) are skipped with
+``pl.when``. Block sizes are MXU-aligned (128 multiples); GQA indexes the
+kv head as h // (H // KV) in the BlockSpec index maps, so K/V are never
+materialised per-q-head.
+
+Layout: q (B, H, T, hd); k, v (B, KV, S, hd) — head-major so the sequence
+axis is the penultimate (sublane) dimension of each block.
+
+Public entry: :func:`repro.kernels.ops.flash_attention`.
+Oracle: :func:`repro.kernels.ref.attention_ref`.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # does this kv block intersect the visible band of this q block?
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest visible key for the oldest query in the block:
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bk)
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_idx < seq_k
+        if causal:
+            mask &= k_idx <= q_idx
+        if window is not None:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, T, hd); k, v: (B, KV, S, hd) -> (B, H, T, hd)."""
+    B, H, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    bq = min(block_q, max(T, 8))
+    bk = min(block_k, max(S, 8))
+    Tp, Sp = (T + bq - 1) // bq * bq, (S + bk - 1) // bk * bk
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    grid = (B, H, Tp // bq, Sp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+            window=window, block_q=bq, block_k=bk, seq_q=T, seq_k=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running normalizer
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :T]

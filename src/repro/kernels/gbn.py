@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for Ghost Batch Normalization (the paper's Algorithm 1
+hot loop).
+
+TPU-native design (not a CUDA port): two single-purpose kernels —
+a tiled reduction producing per-(ghost, channel-tile) sums, and an
+elementwise normalize — each gridded over (ghost, channel-tile, row-tile)
+with VMEM-resident blocks. Channel tiles are multiples of 128 (VPU lane
+width); row tiles bound the VMEM working set regardless of how many
+rows (ghost_batch * H * W for convs) one ghost batch folds in.
+
+Public entry point: :func:`repro.kernels.ops.gbn_forward` (jit'd, falls back
+to interpret mode off-TPU). Oracle: :func:`repro.kernels.ref.gbn_ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROW_TILE = 512
+DEFAULT_COL_TILE = 128
+
+
+def _stats_kernel(x_ref, sum_ref, sq_ref, *, n_rows: int):
+    """Accumulate per-(ghost, col-tile) sum and sum-of-squares over row tiles.
+
+    grid = (G, n_col_tiles, n_row_tiles); the row-tile axis is innermost so
+    the (1, col_tile) accumulators persist in VMEM across row steps.
+    """
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    x = x_ref[0].astype(jnp.float32)                  # (row_tile, col_tile)
+    # mask padded rows in the last row tile
+    row0 = r * x.shape[0]
+    valid = (row0 + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)) < n_rows
+    x = jnp.where(valid, x, 0.0)
+    sum_ref[...] += jnp.sum(x, axis=0, keepdims=True)
+    sq_ref[...] += jnp.sum(x * x, axis=0, keepdims=True)
+
+
+def _normalize_kernel(x_ref, mu_ref, var_ref, gamma_ref, beta_ref, y_ref, *,
+                      eps: float):
+    x = x_ref[0].astype(jnp.float32)                  # (row_tile, col_tile)
+    mu = mu_ref[...].astype(jnp.float32)              # (1, col_tile)
+    var = var_ref[...].astype(jnp.float32)
+    g = gamma_ref[...].astype(jnp.float32)
+    b = beta_ref[...].astype(jnp.float32)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def gbn_forward_pallas(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+                       eps: float = 1e-5,
+                       row_tile: int = DEFAULT_ROW_TILE,
+                       col_tile: int = DEFAULT_COL_TILE,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xg: (G, R, C) -> (y (G,R,C), mu (G,C), var (G,C))."""
+    G, R, C = xg.shape
+    xp = _pad_to(_pad_to(xg, 2, col_tile), 1, row_tile)
+    Rp, Cp = xp.shape[1], xp.shape[2]
+    nr, nc = Rp // row_tile, Cp // col_tile
+
+    sums, sqs = pl.pallas_call(
+        functools.partial(_stats_kernel, n_rows=R),
+        grid=(G, nc, nr),
+        in_specs=[pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c))],
+        out_specs=[pl.BlockSpec((1, col_tile), lambda g, c, r: (g, c)),
+                   pl.BlockSpec((1, col_tile), lambda g, c, r: (g, c))],
+        out_shape=[jax.ShapeDtypeStruct((G, Cp), jnp.float32),
+                   jax.ShapeDtypeStruct((G, Cp), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    mu = sums / R
+    var = sqs / R - mu * mu
+
+    gp = _pad_to(gamma.reshape(1, -1), 1, col_tile)
+    bp = _pad_to(beta.reshape(1, -1), 1, col_tile)
+    y = pl.pallas_call(
+        functools.partial(_normalize_kernel, eps=eps),
+        grid=(G, nc, nr),
+        in_specs=[
+            pl.BlockSpec((1, row_tile, col_tile), lambda g, c, r: (g, r, c)),
+            pl.BlockSpec((1, col_tile), lambda g, c, r: (g, c)),
+            pl.BlockSpec((1, col_tile), lambda g, c, r: (g, c)),
+            pl.BlockSpec((1, col_tile), lambda g, c, r: (0, c)),
+            pl.BlockSpec((1, col_tile), lambda g, c, r: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c)),
+        out_shape=jax.ShapeDtypeStruct((G, Rp, Cp), xg.dtype),
+        interpret=interpret,
+    )(xp, mu, var, gp, bp)
+    return y[:, :R, :C], mu[:, :C], var[:, :C]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for one chunk of the Mamba selective scan.
+
+TPU adaptation of the CUDA selective-scan: instead of a warp-parallel scan
+over the sequence, the kernel keeps the (d_inner-tile, d_state) hidden state
+resident in VMEM and walks the chunk sequentially with a ``fori_loop`` —
+sequential-over-time, parallel-over-channels, which matches the VPU's
+(8, 128) lanes (channels on the lane axis). The outer grid parallelises over
+(batch, d_inner tiles); chunk boundaries are handled by the carried h.
+
+Public entry: :func:`repro.kernels.ops.mamba_chunk`.
+Oracle: :func:`repro.kernels.ref.mamba_chunk_ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_DI_TILE = 512
+
+
+def _mamba_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref,
+                  y_ref, hout_ref, *, chunk: int):
+    """Blocks: x/dt (1, chunk, dit); b/c (1, chunk, ds); a (dit, ds);
+    h0/hout (1, dit, ds); y (1, chunk, dit)."""
+    a = a_ref[...].astype(jnp.float32)                  # (dit, ds)
+    h = h0_ref[0].astype(jnp.float32)                   # (dit, ds)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)           # (dit,)
+        dt_t = dt_ref[0, t].astype(jnp.float32)
+        b_t = b_ref[0, t].astype(jnp.float32)           # (ds,)
+        c_t = c_ref[0, t].astype(jnp.float32)
+        decay = jnp.exp(dt_t[:, None] * a)              # (dit, ds)
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = jnp.sum(h * c_t[None, :], axis=-1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h)
+    hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def mamba_chunk_pallas(xc: jax.Array, dt: jax.Array, Bm: jax.Array,
+                       Cm: jax.Array, A: jax.Array, h0: jax.Array, *,
+                       di_tile: int = DEFAULT_DI_TILE,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """xc, dt: (B, c, di); Bm, Cm: (B, c, ds); A: (di, ds); h0: (B, di, ds).
+
+    Returns (y (B, c, di) f32, h_last (B, di, ds) f32).
+    """
+    B, c, di = xc.shape
+    ds = A.shape[1]
+    dit = min(di_tile, di)
+    assert di % dit == 0, (di, dit)
+    grid = (B, di // dit)
+
+    y, hout = pl.pallas_call(
+        functools.partial(_mamba_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, dit), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, c, dit), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, c, ds), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, c, ds), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((dit, ds), lambda b, d: (d, 0)),
+            pl.BlockSpec((1, dit, ds), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, dit), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, dit, ds), lambda b, d: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, c, di), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dt, Bm, Cm, A, h0)
+    return y, hout

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container) they
+run in ``interpret=True`` mode, which traces the kernel body to regular XLA
+ops — bit-for-bit the same program structure, validated against the
+pure-jnp oracles in :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gbn import gbn_forward_pallas
+from repro.kernels.mamba_scan import mamba_chunk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: Optional[int] = None) -> jax.Array:
+    """Layout adapter for the model code: q (B, T, H, hd); k, v
+    (B, S, KV, hd) -> (B, T, H, hd). Internally head-major."""
+    qm = q.swapaxes(1, 2)
+    km = k.swapaxes(1, 2)
+    vm = v.swapaxes(1, 2)
+    out = flash_attention_pallas(qm, km, vm, causal=causal, window=window,
+                                 interpret=_interpret())
+    return out.swapaxes(1, 2)
+
+
+def flash_attention_hm(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: Optional[int] = None,
+                       block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Head-major entry (B, H, T, hd) matching the oracle layout."""
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# ghost batch norm
+# ---------------------------------------------------------------------------
+
+
+def gbn_forward(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+                eps: float = 1e-5) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xg: (G, R, C) -> (y, mu (G,C), var (G,C))."""
+    return gbn_forward_pallas(xg, gamma, beta, eps=eps,
+                              interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# mamba chunk scan
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def mamba_chunk(xc: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                A: jax.Array, h0: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Pallas chunk scan with a custom VJP: the forward runs the
+    VMEM-resident kernel; the backward differentiates the pure-jnp oracle
+    (a dedicated backward kernel is future work — the forward already
+    removes the (B, c, d_inner, d_state) HBM round-trips that dominate,
+    see EXPERIMENTS.md §Perf P2)."""
+    di = xc.shape[-1]
+    # pick the largest 128-multiple tile that divides d_inner (<= 512)
+    for cand in (512, 256, 128):
+        if di % cand == 0:
+            return mamba_chunk_pallas(xc, dt, Bm, Cm, A, h0, di_tile=cand,
+                                      interpret=_interpret())
+    return ref.mamba_chunk_ref(xc, dt, Bm, Cm, A, h0)
+
+
+def _mamba_chunk_fwd(xc, dt, Bm, Cm, A, h0):
+    out = mamba_chunk(xc, dt, Bm, Cm, A, h0)
+    return out, (xc, dt, Bm, Cm, A, h0)
+
+
+def _mamba_chunk_bwd(res, cts):
+    _, vjp = jax.vjp(ref.mamba_chunk_ref, *res)
+    return vjp(cts)
+
+
+mamba_chunk.defvjp(_mamba_chunk_fwd, _mamba_chunk_bwd)

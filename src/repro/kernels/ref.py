@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B, H, T, hd); k, v: (B, KV, S, hd). Returns (B, H, T, hd).
+
+    GQA: head h uses kv head h // (H // KV).
+    """
+    B, H, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, KV, g, T, hd)
+    logits = jnp.einsum("bkgtd,bksd->bkgts", qg,
+                        k).astype(jnp.float32) / math.sqrt(hd)
+    qi = jnp.arange(T)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bksd->bkgtd", p, v)
+    return out.reshape(B, H, T, hd)
+
+
+# ---------------------------------------------------------------------------
+# ghost batch norm oracle
+# ---------------------------------------------------------------------------
+
+
+def gbn_ref(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+            eps: float = 1e-5) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xg: (G, R, C) -> (y (G,R,C), mu (G,C), var (G,C)); biased variance."""
+    xf = xg.astype(jnp.float32)
+    mu = xf.mean(axis=1)
+    var = jnp.mean(jnp.square(xf - mu[:, None, :]), axis=1)
+    y = (xf - mu[:, None, :]) * jax.lax.rsqrt(var[:, None, :] + eps)
+    y = y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return y.astype(xg.dtype), mu, var
+
+
+# ---------------------------------------------------------------------------
+# mamba chunk-scan oracle
+# ---------------------------------------------------------------------------
+
+
+def mamba_chunk_ref(xc: jax.Array, dt: jax.Array, Bm: jax.Array,
+                    Cm: jax.Array, A: jax.Array, h0: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential reference for one chunk of the selective scan.
+
+    xc, dt: (B, c, di); Bm, Cm: (B, c, ds); A: (di, ds); h0: (B, di, ds).
+    Returns (y (B, c, di) f32, h_last (B, di, ds) f32).
+    """
+    xc = xc.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a = jnp.exp(dt_t[:, :, None] * A)            # (B, di, ds)
+        h = a * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    inps = (xc.swapaxes(0, 1), dt.swapaxes(0, 1),
+            Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), inps)
+    return ys.swapaxes(0, 1), h_last

@@ -1,0 +1,400 @@
+"""Post-SPMD HLO analysis: loop-aware collective / FLOP / byte accounting
+plus roofline terms.
+
+Why not just ``compiled.cost_analysis()``: XLA's cost analysis counts a
+``while`` body **once**, so anything under a ``lax.scan`` (our layer stacks)
+is undercounted by its trip count. We therefore parse the optimized,
+partitioned HLO text ourselves:
+
+- computations are parsed into instruction lists;
+- ``while`` trip counts are recovered from their condition computations
+  (scan-canonical ``counter < constant(N)`` patterns);
+- an execution multiplicity is propagated through nested while bodies;
+- FLOPs are counted from ``dot`` / ``convolution`` shapes (2*M*N*K),
+  weighted by multiplicity — fusion-internal dots included, because fusion
+  computations inherit their caller's multiplicity;
+- HBM bytes are modeled at fusion boundaries: for every top-level executed
+  instruction, operand bytes (reads) + result bytes (writes);
+- collective bytes sum operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (and -start forms),
+  weighted by multiplicity.
+
+Hardware model (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI, 4 links/chip.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+N_LINKS = 4
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|\S+?))\s+"
+    r"([\w\-]+)\((.*)$")
+# computation headers end with '{' and contain '->' (parameter lists may hold
+# nested parens — tuple-typed args — so only anchor on the leading name)
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[List[int]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append(dims)
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # everything after the opening paren of operands
+
+    def operand_names(self) -> List[str]:
+        depth = 1
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    inner = self.rest[:i]
+                    break
+        else:
+            inner = self.rest
+        return re.findall(r"%([\w\.\-]+)", inner)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def attr_list(self, key: str) -> List[int]:
+        m = re.search(key + r"=\{([\d,\s]*)\}", self.rest)
+        if not m or not m.group(1).strip():
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = field(default_factory=list)
+    sizes: Dict[str, int] = field(default_factory=dict)   # result bytes
+
+    def instr_by_name(self, name: str) -> Optional[Instr]:
+        for i in self.instrs:
+            if i.name == name:
+                return i
+        return None
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    """Parse HLO text into computations; returns (comps, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            stripped = line.rstrip()
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HEADER_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(2), bool(m.group(1)))
+                    if m.group(1):
+                        entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.sizes[ins.name] = _shape_bytes(ins.type_str)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover a while trip count from scan-canonical conditions."""
+    const = None
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"(\-?\d+)", ins.rest)
+            if m:
+                const = int(m.group(1))
+    for ins in cond.instrs:
+        if "compare" in ins.opcode or "compare" in ins.rest:
+            if const is not None and const > 0:
+                return const
+    # fused compare: constant appears at caller level; fall back to any
+    # positive constant found
+    return const if (const and const > 0) else 1
+
+
+def _multiplicities(comps: Dict[str, Computation], entry: str
+                    ) -> Dict[str, float]:
+    """Execution multiplicity per computation (1 for entry; x trip count
+    inside while bodies; fusions/calls inherit the caller's)."""
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry not in comps:
+        return {c: 1.0 for c in comps}
+    mult[entry] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(20):
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode == "while":
+                    body, cond = ins.attr("body"), ins.attr("condition")
+                    trips = 1
+                    if cond in comps:
+                        # constant may live in caller: check cond first
+                        trips = _trip_count(comps[cond])
+                        if trips == 1:
+                            # look for "constant(N)" referenced via operands
+                            trips = _caller_trip_hint(comp, ins) or 1
+                    for target, k in ((body, trips), (cond, trips + 1)):
+                        if target in comps:
+                            new = m * k
+                            if new > mult.get(target, 0.0):
+                                mult[target] = new
+                                changed = True
+                else:
+                    for key in ("calls", "to_apply", "body", "condition"):
+                        t = ins.attr(key)
+                        if t in comps and m > mult.get(t, 0.0):
+                            mult[t] = m
+                            changed = True
+                    m2 = re.search(r"branch_computations=\{([^\}]*)\}",
+                                   ins.rest)
+                    if m2:
+                        for t in re.findall(r"%?([\w\.\-]+)", m2.group(1)):
+                            if t in comps and m > mult.get(t, 0.0):
+                                mult[t] = m
+                                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _caller_trip_hint(comp: Computation, while_ins: Instr) -> Optional[int]:
+    return None
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_hbm: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, Tuple[int, float]] = field(default_factory=dict)
+    n_whiles: int = 0
+    trip_counts: List[int] = field(default_factory=list)
+
+    def coll_dict(self) -> Dict:
+        return {k: {"count": int(c), "bytes": float(b)}
+                for k, (c, b) in sorted(self.collectives.items())}
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dims)."""
+    res_dims = _shape_dims(ins.type_str)
+    if not res_dims:
+        return 0.0
+    out_elems = math.prod(res_dims[0]) if res_dims[0] else 1
+    ops = ins.operand_names()
+    contr = ins.attr_list("lhs_contracting_dims")
+    k = 1
+    if ops:
+        lhs = comp.instr_by_name(ops[0])
+        lhs_dims = _shape_dims(lhs.type_str)[0] if lhs else []
+        for c in contr:
+            if c < len(lhs_dims):
+                k *= lhs_dims[c]
+    return 2.0 * out_elems * max(k, 1)
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    res_dims = _shape_dims(ins.type_str)
+    ops = ins.operand_names()
+    if not res_dims or len(ops) < 2:
+        return 0.0
+    out_elems = math.prod(res_dims[0]) if res_dims[0] else 1
+    rhs = comp.instr_by_name(ops[1])
+    if rhs is None:
+        return 0.0
+    kd = _shape_dims(rhs.type_str)
+    if not kd or not kd[0]:
+        return 0.0
+    # kernel spatial+input-feature size = prod(kernel dims)/output features
+    kernel = math.prod(kd[0])
+    out_feat = max(kd[0][-1], 1)
+    return 2.0 * out_elems * kernel / out_feat
+
+
+_EXECUTED_OPCODES_SKIP = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "fusion", "call", "conditional", "custom-call",
+}
+
+
+def analyze(text: str, dus_aliased: bool = False) -> HloStats:
+    """``dus_aliased=True`` models dynamic-(update-)slice as in-place (TPU
+    aliasing): traffic = 2x the slice, not read+write of the whole buffer.
+    The conservative default keeps the whole-buffer cost (upper bound) and is
+    what the baseline roofline table uses; the aliased number is reported for
+    the decode §Perf iterations, where scan-carried KV caches dominate."""
+    comps, entry = parse_hlo(text)
+    mult = _multiplicities(comps, entry)
+    stats = HloStats()
+
+    # collect names of computations used as fusion bodies (their instrs count
+    # for FLOPs but not for HBM bytes)
+    fusion_bodies = set()
+    executed = set()   # top-level executed computations (entry + while parts)
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                t = ins.attr("calls")
+                if t:
+                    fusion_bodies.add(t)
+            if ins.opcode == "while":
+                stats.n_whiles += 1
+                for key in ("body", "condition"):
+                    t = ins.attr(key)
+                    if t:
+                        executed.add(t)
+                cond = ins.attr("condition")
+                if cond in comps:
+                    stats.trip_counts.append(_trip_count(comps[cond]))
+    if entry:
+        executed.add(entry)
+    # transitively: while bodies nested in while bodies are already added
+    # via the loop above (all comps scanned).
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0.0:
+            continue
+        for ins in comp.instrs:
+            # ---- FLOPs: dots and convs anywhere (incl. fusion bodies)
+            if ins.opcode == "dot":
+                stats.flops += m * _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                stats.flops += m * _conv_flops(ins, comp)
+            # ---- collectives
+            base = ins.opcode[:-6] if ins.opcode.endswith("-start") \
+                else ins.opcode
+            if base in _COLLECTIVES:
+                ob = 0
+                for nm in ins.operand_names():
+                    ob += comp.sizes.get(nm, 0)
+                if ob == 0:
+                    ob = comp.sizes.get(ins.name, 0)
+                c, b = stats.collectives.get(base, (0, 0.0))
+                stats.collectives[base] = (c + int(m), b + m * ob)
+                stats.collective_bytes += m * ob
+            # ---- HBM bytes: fusion-boundary model, only in top-level
+            # executed computations (not inside fusion bodies)
+            if cname in executed and cname not in fusion_bodies:
+                if ins.opcode in ("parameter", "constant", "tuple",
+                                  "get-tuple-element", "bitcast", "while",
+                                  "conditional"):
+                    continue
+                rb = comp.sizes.get(ins.name, 0)
+                op_bytes = [comp.sizes.get(nm, 0)
+                            for nm in ins.operand_names()]
+                ob = sum(op_bytes)
+                if dus_aliased and _is_dus_like(ins, comps):
+                    # in-place slice update: read update + write region
+                    update = ob - (max(op_bytes) if op_bytes else 0)
+                    stats.bytes_hbm += m * 2 * max(update, 0)
+                elif dus_aliased and ins.opcode == "dynamic-slice":
+                    stats.bytes_hbm += m * 2 * rb
+                else:
+                    stats.bytes_hbm += m * (rb + ob)
+    return stats
+
+
+def _is_dus_like(ins: Instr, comps: Dict[str, "Computation"]) -> bool:
+    if ins.opcode == "dynamic-update-slice":
+        return True
+    if ins.opcode != "fusion":
+        return False
+    if "dynamic_update_slice" in ins.rest:
+        return True
+    body = ins.attr("calls")
+    if body in comps:
+        return any(i.opcode == "dynamic-update-slice"
+                   for i in comps[body].instrs)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(device_flops: float, device_bytes: float,
+                   collective_bytes: float) -> Dict[str, float]:
+    """Three roofline times in seconds (per chip; the per-device SPMD program
+    is what we analyzed, so device quantities / per-chip rates)."""
+    return {
+        "compute_s": device_flops / PEAK_FLOPS,
+        "memory_s": device_bytes / HBM_BW,
+        "collective_s": collective_bytes / (N_LINKS * ICI_BW),
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def model_flops(n_active_params: int, n_tokens: int, *,
+                train: bool = True) -> float:
+    """6*N*D for a train step (fwd+bwd), 2*N*D for inference."""
+    return (6.0 if train else 2.0) * n_active_params * n_tokens

@@ -1,0 +1,59 @@
+"""Serving launcher: batched greedy generation against a (reduced or full)
+architecture — the runnable counterpart of the decode dry-run shapes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-reduced \
+        --batch 8 --prompt-len 16 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.serving import generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b-reduced")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--dtype", default="float32")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
+    rng = jax.random.PRNGKey(0)
+    params = T.init_params(rng, cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    memory = None
+    if cfg.vision is not None:
+        memory = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.vision.n_image_tokens, cfg.d_model))
+    if cfg.encoder is not None:
+        frames = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (args.batch, 32, cfg.encoder.d_model))
+        memory = T.encode(params, cfg, frames.astype(jnp.dtype(cfg.dtype)))
+
+    t0 = time.time()
+    out = generate(params, cfg, prompts, max_new_tokens=args.max_new,
+                   memory=memory)
+    out.block_until_ready()
+    dt = time.time() - t0
+    n_new = args.batch * args.max_new
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({n_new / dt:.1f} tok/s incl. compile)")
+    print("sample row:", out[0, :32].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x input-shape)
+combination — the dry-run's stand-ins (weak-type-correct, shardable, no
+device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.large_batch import LargeBatchConfig
+from repro.core.regime import Regime
+from repro.launch.mesh import dp_axes
+from repro.models import transformer as T
+from repro.optim import sgd
+from repro.serving.engine import make_serve_step
+from repro.sharding import rules
+from repro.train.trainer import make_lm_train_step
+
+Sds = jax.ShapeDtypeStruct
+
+
+def default_large_batch_config(shape: InputShape) -> LargeBatchConfig:
+    """The paper-faithful large-batch recipe at production scale: sqrt-scaled
+    LR + gradient clipping (noise off: the paper prefers the LR method)."""
+    return LargeBatchConfig(batch_size=shape.global_batch,
+                            base_batch_size=32, lr_rule="sqrt",
+                            regime_adaptation=True, grad_clip=1.0)
+
+
+def default_regime() -> Regime:
+    return Regime(base_lr=0.01, total_steps=10_000, drop_every=2_000)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh
+                ) -> Tuple[Dict[str, Sds], Dict[str, P]]:
+    """Token batch + modality stubs (audio frames / vision patch embeds)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    shapes = {"tokens": Sds((B, S), jnp.int32)}
+    specs = {"tokens": rules.batch_spec(mesh, B, 2)}
+    if cfg.encoder is not None:
+        F = S // cfg.encoder.frame_ratio
+        shapes["frames"] = Sds((B, F, cfg.encoder.d_model), dt)
+        specs["frames"] = rules.batch_spec(mesh, B, 3)
+    if cfg.vision is not None:
+        n = cfg.vision.n_image_tokens
+        shapes["image_embeds"] = Sds((B, n, cfg.d_model), dt)
+        specs["image_embeds"] = rules.batch_spec(mesh, B, 3)
+    return shapes, specs
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(params, momentum_dtype: str = "bfloat16"):
+    return jax.eval_shape(lambda p: sgd.init(p, momentum_dtype), params)
+
+
+def opt_state_specs(param_spec_tree, momentum_dtype: str = "bfloat16",
+                    abstract_opt=None, mesh=None):
+    """Momentum shards exactly like its parameter; step replicated.
+
+    int8 momentum is stored as blockwise {q (Nblk, 256), scale (Nblk, 1)} —
+    the block axis is sharded over all mesh axes when divisible."""
+    if momentum_dtype == "int8":
+        assert abstract_opt is not None and mesh is not None
+
+        def _axsize(ax):
+            if ax is None:
+                return 1
+            if isinstance(ax, tuple):
+                n = 1
+                for a in ax:
+                    n *= mesh.shape[a]
+                return n
+            return mesh.shape[ax]
+
+        def mom_specs(pspec, qleaf):
+            # q: param dims with the last split into (nb, 256); inherit the
+            # param spec, keeping the last-dim axis on nb when it divides —
+            # otherwise move it onto the 256-block axis (always divisible).
+            axes = list(pspec)
+            nb = qleaf["q"].shape[-2]
+            last_ax = axes[-1] if axes else None
+            lead = axes[:-1]
+            if last_ax is not None and nb % _axsize(last_ax) != 0:
+                return {"q": P(*lead, None, last_ax),
+                        "scale": P(*lead, None, None)}
+            return {"q": P(*lead, last_ax, None),
+                    "scale": P(*lead, last_ax, None)}
+
+        mom = jax.tree.map(mom_specs, param_spec_tree, abstract_opt.momentum,
+                           is_leaf=lambda x: isinstance(x, P))
+        return sgd.SGDState(momentum=mom, step=P())
+    return sgd.SGDState(momentum=param_spec_tree, step=P())
+
+
+def train_setup(cfg: ModelConfig, shape: InputShape, mesh, *,
+                momentum_dtype: str = "bfloat16",
+                use_kernels: bool = False,
+                remat: bool = True,
+                seq_parallel: bool = True,
+                ce_chunk: int = 0,
+                lb: Optional[LargeBatchConfig] = None
+                ) -> Tuple[Callable, Tuple, Any]:
+    """Returns (train_step, abstract args, in_shardings) ready to lower.
+
+    ``remat=True``: full-block activation checkpointing — the production
+    default (stored per-layer activations would not fit HBM at 1M tokens).
+    """
+    lb = lb or default_large_batch_config(shape)
+    step_fn = make_lm_train_step(cfg, lb, default_regime(),
+                                 use_kernels=use_kernels,
+                                 momentum_dtype=momentum_dtype,
+                                 remat=remat, seq_parallel=seq_parallel,
+                                 ce_chunk=ce_chunk)
+    params = abstract_params(cfg)
+    opt = abstract_opt_state(params, momentum_dtype)
+    bshapes, bspecs = batch_specs(cfg, shape, mesh)
+    pspecs = rules.param_specs(params, mesh, cfg)
+    ospecs = opt_state_specs(pspecs, momentum_dtype, opt, mesh)
+    args = (params, opt, bshapes,
+            Sds((), jnp.int32),            # step
+            Sds((2,), jnp.uint32))         # rng key data
+    in_specs = (pspecs, ospecs, bspecs, P(), P())
+    return step_fn, args, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), in_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def prefill_setup(cfg: ModelConfig, shape: InputShape, mesh, *,
+                  use_kernels: bool = False) -> Tuple[Callable, Tuple, Any]:
+    """Prefill: full-sequence forward producing last-position logits."""
+
+    def prefill_step(params, batch):
+        memory = T.get_memory(params, cfg, batch, use_kernels)
+        logits, _ = T.forward(params, cfg, batch["tokens"], memory=memory,
+                              use_kernels=use_kernels)
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    params = abstract_params(cfg)
+    bshapes, bspecs = batch_specs(cfg, shape, mesh)
+    pspecs = rules.param_specs(params, mesh, cfg)
+    args = (params, bshapes)
+    in_specs = (pspecs, bspecs)
+    return prefill_step, args, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), in_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def decode_setup(cfg: ModelConfig, shape: InputShape, mesh, *,
+                 use_kernels: bool = False) -> Tuple[Callable, Tuple, Any]:
+    """serve_step: ONE new token against a seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    mem_len = T.memory_len(cfg, S)
+    serve_step = make_serve_step(cfg, use_kernels)
+    params = abstract_params(cfg)
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, memory_len=mem_len, dtype=dt))
+    pspecs = rules.param_specs(params, mesh, cfg)
+    cspecs = rules.cache_specs(cache, mesh, B)
+    args = (params, cache, Sds((B, 1), jnp.int32), Sds((), jnp.int32))
+    in_specs = (pspecs, cspecs, rules.batch_spec(mesh, B, 2), P())
+    return serve_step, args, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), in_specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def setup_for(cfg: ModelConfig, shape: InputShape, mesh, *,
+              momentum_dtype: str = "bfloat16", use_kernels: bool = False,
+              seq_parallel: bool = True, ce_chunk: int = 0):
+    if shape.kind == "train":
+        return train_setup(cfg, shape, mesh, momentum_dtype=momentum_dtype,
+                           use_kernels=use_kernels,
+                           seq_parallel=seq_parallel, ce_chunk=ce_chunk)
+    if shape.kind == "prefill":
+        return prefill_setup(cfg, shape, mesh, use_kernels=use_kernels)
+    return decode_setup(cfg, shape, mesh, use_kernels=use_kernels)

@@ -1,0 +1,3 @@
+from repro.models import blocks, cnn, layers, mlp, moe, ssm, transformer
+
+__all__ = ["blocks", "cnn", "layers", "mlp", "moe", "ssm", "transformer"]

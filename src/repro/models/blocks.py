@@ -1,0 +1,276 @@
+"""LayerSpec interpreter: builds and applies transformer/ssm blocks.
+
+A "block" is one LayerSpec: optional cross-attention sublayer, a sequence
+mixer (attention / sliding-window attention / mamba), and a feed-forward
+(dense SwiGLU / MoE / none), each with pre-norms and residuals.
+
+The repeating ``body_pattern`` is executed as a ``lax.scan`` over stacked
+parameters (one stack of ``body_repeats`` per pattern slot) so that HLO size
+and compile time stay flat in network depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.sharding.hints import current_mesh, hint
+
+Params = Dict[str, Any]
+
+
+def _sp_hint(x: jax.Array, enabled: bool) -> jax.Array:
+    """Megatron-style sequence parallelism: between blocks the residual
+    stream is sharded over ('model' x sequence) in addition to the batch
+    axes, so remat-saved block inputs shrink by the model-parallel degree.
+    GSPMD inserts the all-gather at the qkv/mlp projections and turns the
+    output all-reduces into reduce-scatters."""
+    if not enabled or x.ndim != 3:
+        return x
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    if x.shape[1] % mesh.shape["model"] != 0:
+        return x
+    return hint(x, "dp", "model", None)
+
+ZERO_AUX = {"moe_aux": jnp.zeros(()), "moe_z": jnp.zeros(())}
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+
+def block_init(rng, cfg: ModelConfig, spec: LayerSpec, dtype=jnp.float32
+               ) -> Params:
+    ks = jax.random.split(rng, 4)
+    p: Params = {}
+    if spec.mixer in ("attn", "swa"):
+        p["norm1"] = L.norm_init(cfg, cfg.d_model, jnp.float32)
+        p["mixer"] = L.attention_init(ks[0], cfg, dtype)
+    elif spec.mixer == "ssm":
+        p["norm1"] = L.norm_init(cfg, cfg.d_model, jnp.float32)
+        p["mixer"] = SSM.ssm_init(ks[0], cfg, dtype)
+    if spec.cross_attn:
+        p["norm_x"] = L.norm_init(cfg, cfg.d_model, jnp.float32)
+        p["cross"] = L.cross_attention_init(ks[1], cfg, dtype)
+    if spec.ff == "dense":
+        p["norm2"] = L.norm_init(cfg, cfg.d_model, jnp.float32)
+        p["ff"] = L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+    elif spec.ff == "moe":
+        p["norm2"] = L.norm_init(cfg, cfg.d_model, jnp.float32)
+        p["ff"] = MOE.moe_init(ks[2], cfg, dtype)
+    return p
+
+
+def block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
+                memory_len: int = 0, dtype=jnp.bfloat16) -> Params:
+    """Decode-time cache for one block."""
+    c: Params = {}
+    if spec.mixer in ("attn", "swa"):
+        window = cfg.sliding_window if spec.mixer == "swa" else None
+        c["attn"] = L.init_kv_cache(cfg, batch, max_len, window, dtype)
+    elif spec.mixer == "ssm":
+        c["ssm"] = SSM.init_ssm_cache(cfg, batch)
+    if spec.cross_attn:
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        c["cross_k"] = jnp.zeros((batch, memory_len, kv, hd), dtype=dtype)
+        c["cross_v"] = jnp.zeros((batch, memory_len, kv, hd), dtype=dtype)
+    return c
+
+
+def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
+                x: jax.Array, *,
+                positions: Optional[jax.Array] = None,
+                memory: Optional[jax.Array] = None,
+                cache: Optional[Params] = None,
+                pos: Optional[jax.Array] = None,
+                decode: bool = False,
+                causal: bool = True,
+                use_kernels: bool = False,
+                ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    """Apply one block. Returns (x, new_cache or None, aux)."""
+    aux = dict(ZERO_AUX)
+    new_cache: Params = {} if cache is not None else None
+
+    if spec.cross_attn:
+        h = L.norm_apply(cfg, params["norm_x"], x)
+        if decode:
+            y = L.cross_attention_apply(
+                params["cross"], cfg, h, cache["cross_k"], cache["cross_v"])
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            k, v = L.cross_kv(params["cross"], cfg, memory)
+            y = L.cross_attention_apply(params["cross"], cfg, h, k, v)
+        x = x + y
+
+    if spec.mixer in ("attn", "swa"):
+        window = cfg.sliding_window if spec.mixer == "swa" else None
+        h = L.norm_apply(cfg, params["norm1"], x)
+        if decode:
+            y, kvc = L.attention_decode(params["mixer"], cfg, h,
+                                        cache["attn"], pos, window=window)
+            new_cache["attn"] = kvc
+        else:
+            y = L.attention_full(params["mixer"], cfg, h, positions,
+                                 window=window, causal=causal,
+                                 use_kernels=use_kernels)
+        x = x + y
+    elif spec.mixer == "ssm":
+        h = L.norm_apply(cfg, params["norm1"], x)
+        if decode:
+            y, sc = SSM.ssm_decode(params["mixer"], cfg, h, cache["ssm"])
+            new_cache["ssm"] = sc
+        else:
+            y = SSM.ssm_forward(params["mixer"], cfg, h,
+                                use_kernels=use_kernels)
+        x = x + y
+
+    if spec.ff == "dense":
+        h = L.norm_apply(cfg, params["norm2"], x)
+        x = x + L.mlp_apply(params["ff"], h)
+    elif spec.ff == "moe":
+        h = L.norm_apply(cfg, params["norm2"], x)
+        y, moe_aux = MOE.moe_apply(params["ff"], cfg, h)
+        aux.update(moe_aux)
+        x = x + y
+
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stacks: head (unrolled) + body (scanned) + tail (unrolled)
+# ---------------------------------------------------------------------------
+
+
+def stack_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    rh, rb, rt = jax.random.split(rng, 3)
+    p: Params = {"head": [], "body": [], "tail": []}
+    for i, spec in enumerate(cfg.head_pattern):
+        p["head"].append(block_init(jax.random.fold_in(rh, i), cfg, spec, dtype))
+    for i, spec in enumerate(cfg.body_pattern):
+        slot_rng = jax.random.fold_in(rb, i)
+        rngs = jax.random.split(slot_rng, cfg.body_repeats)
+        p["body"].append(
+            jax.vmap(lambda r: block_init(r, cfg, spec, dtype))(rngs))
+    for i, spec in enumerate(cfg.tail_pattern):
+        p["tail"].append(block_init(jax.random.fold_in(rt, i), cfg, spec, dtype))
+    return p
+
+
+def stack_cache(cfg: ModelConfig, batch: int, max_len: int,
+                memory_len: int = 0, dtype=jnp.bfloat16) -> Params:
+    def one(spec):
+        return block_cache(cfg, spec, batch, max_len, memory_len, dtype)
+
+    def stacked(spec):
+        c = one(spec)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.body_repeats,) + a.shape).copy()
+            if cfg.body_repeats > 1 else a[None], c)
+
+    return {
+        "head": [one(s) for s in cfg.head_pattern],
+        "body": [stacked(s) for s in cfg.body_pattern],
+        "tail": [one(s) for s in cfg.tail_pattern],
+    }
+
+
+def _sum_aux(acc: Dict, new: Dict) -> Dict:
+    return {k: acc[k] + new[k] for k in acc}
+
+
+def stack_apply(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                positions: Optional[jax.Array] = None,
+                memory: Optional[jax.Array] = None,
+                cache: Optional[Params] = None,
+                pos: Optional[jax.Array] = None,
+                decode: bool = False,
+                causal: bool = True,
+                use_kernels: bool = False,
+                remat: bool = False,
+                seq_parallel: bool = False,
+                ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
+    """Run the full head+body+tail stack.
+
+    ``remat=True`` wraps each block in ``jax.checkpoint`` (full block
+    rematerialization) — required for the production train configs, where
+    storing per-layer activations for 4k x 256 batches would exceed HBM.
+    ``seq_parallel=True`` additionally shards the residual stream over
+    (sequence x 'model') between blocks (see ``_sp_hint``).
+    """
+    aux = dict(ZERO_AUX)
+    new_cache = {"head": [], "body": [], "tail": []} if cache is not None else None
+    kw = dict(positions=positions, memory=memory, pos=pos, decode=decode,
+              causal=causal, use_kernels=use_kernels)
+
+    def make_block_fn(spec: LayerSpec):
+        """Bind the static arguments; optionally wrap in jax.checkpoint."""
+        def fn(p, x, c, positions, memory):
+            x = _sp_hint(x, seq_parallel)
+            out = block_apply(p, cfg, spec, x, cache=c, positions=positions,
+                              memory=memory, pos=pos, decode=decode,
+                              causal=causal, use_kernels=use_kernels)
+            return (_sp_hint(out[0], seq_parallel),) + out[1:]
+        if remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn
+
+    block_fns = {}
+
+    def apply_block(p, spec, x, c):
+        if spec not in block_fns:
+            block_fns[spec] = make_block_fn(spec)
+        return block_fns[spec](p, x, c, positions, memory)
+
+    for i, spec in enumerate(cfg.head_pattern):
+        c = cache["head"][i] if cache is not None else None
+        x, nc, a = apply_block(params["head"][i], spec, x, c)
+        aux = _sum_aux(aux, a)
+        if cache is not None:
+            new_cache["head"].append(nc)
+
+    if cfg.body_pattern:
+        def body(carry, xs):
+            xb = carry
+            slot_params, slot_caches = xs
+            aux_b = dict(ZERO_AUX)
+            ncs = []
+            for j, spec in enumerate(cfg.body_pattern):
+                c = slot_caches[j] if slot_caches is not None else None
+                xb, nc, a = apply_block(slot_params[j], spec, xb, c)
+                aux_b = _sum_aux(aux_b, a)
+                ncs.append(nc)
+            ys = (tuple(ncs) if slot_caches is not None else 0, aux_b)
+            return xb, ys
+
+        body_caches = (tuple(cache["body"]) if cache is not None else None)
+        xs = (tuple(params["body"]), body_caches) if cache is not None \
+            else (tuple(params["body"]), None)
+        if cache is not None:
+            x, (ncs, aux_b) = jax.lax.scan(body, x, xs)
+            new_cache["body"] = list(ncs)
+        else:
+            # no cache: scan only over params
+            def body_nc(carry, slot_params):
+                xb, ys = body(carry, (slot_params, None))
+                return xb, ys[1]
+            x, aux_b = jax.lax.scan(body_nc, x, tuple(params["body"]))
+        aux = _sum_aux(aux, jax.tree.map(jnp.sum, aux_b))
+
+    for i, spec in enumerate(cfg.tail_pattern):
+        c = cache["tail"][i] if cache is not None else None
+        x, nc, a = apply_block(params["tail"][i], spec, x, c)
+        aux = _sum_aux(aux, a)
+        if cache is not None:
+            new_cache["tail"].append(nc)
+
+    return x, new_cache, aux

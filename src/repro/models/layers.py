@@ -1,0 +1,375 @@
+"""Core neural-net layers: norms, RoPE, GQA attention (full / sliding-window /
+cross), SwiGLU MLP.
+
+All layers are pure functions over explicit parameter pytrees:
+
+    params = <layer>_init(rng, ...)
+    y      = <layer>_apply(params, x, ...)
+
+Compute happens in ``compute_dtype`` (bf16 on the production configs, fp32 in
+smoke tests); parameters are stored in the dtype they were initialised with.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.hints import hint, model_axis_if
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Glorot/He-style scaled normal init (paper uses Glorot & Bengio 2010)."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(rng, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_apply(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm_apply(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg: ModelConfig, d: int, dtype=jnp.float32) -> Params:
+    if cfg.norm.kind == "layernorm":
+        return layernorm_init(d, dtype)
+    return rmsnorm_init(d, dtype)
+
+
+def norm_apply(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm.kind == "layernorm":
+        return layernorm_apply(params, x, cfg.norm.eps)
+    return rmsnorm_apply(params, x, cfg.norm.eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (half-rotation / llama convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., T, hd/2)
+    angles = angles[..., None, :]                          # (..., T, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: Optional[jax.Array], rope: bool = True):
+    B = x.shape[0]
+    T = x.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, T, h, hd)
+    k = (x @ params["wk"].astype(dt)).reshape(B, T, kv, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(B, T, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm.eps)
+        k = rmsnorm_apply(params["k_norm"], k, cfg.norm.eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """q: (B,T,h,hd); k,v: (B,S,kv,hd). GQA: kv heads are repeated to h —
+    the repeat is transient (layer-local) and lets the head axis shard over
+    the 'model' mesh axis regardless of the kv:q ratio.
+    mask: broadcastable to (B, T, S), True = attend."""
+    B, T, h, hd = q.shape
+    S, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = hint(q, "dp", None, "model", None)
+    k = hint(k, "dp", None, "model", None)
+    v = hint(v, "dp", None, "model", None)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    logits = hint(logits / math.sqrt(hd), "dp", "model", None, None)
+    if mask is not None:
+        m = jnp.broadcast_to(mask, (B,) + mask.shape[-2:])
+        logits = jnp.where(m[:, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return hint(out, "dp", None, "model", None)
+
+
+def _sdpa_grouped(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: Optional[jax.Array]) -> jax.Array:
+    """Decode-path attention WITHOUT repeating K/V to full heads (§Perf:
+    repeating a 500k-token cache materialises gigabytes per layer per token).
+    q: (B,T,h,hd); k,v: (B,S,kv,hd); GQA via grouped einsum; kv heads are
+    sharded over 'model' when divisible (cache rule), so hint accordingly."""
+    B, T, h, hd = q.shape
+    S, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    kv_ax = model_axis_if(kv)   # shard kv heads only when they divide evenly
+    qg = q.reshape(B, T, kv, g, hd)
+    if kv_ax is not None:
+        # kv-head-parallel decode: keep q/k/v and logits head-sharded
+        qg = hint(qg, "dp", None, kv_ax, None, None)
+        k = hint(k, "dp", None, kv_ax, None)
+        v = hint(v, "dp", None, kv_ax, None)
+    # else: leave k/v alone — the cache is sequence-sharded over 'model'
+    # (rules.cache_specs) and forcing replication here would all-gather it.
+    logits = jnp.einsum("btkgd,bskd->bktgs", qg, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if kv_ax is not None:
+        logits = hint(logits, "dp", kv_ax, None, None, None)
+    if mask is not None:
+        m = jnp.broadcast_to(mask, (B,) + mask.shape[-2:])
+        logits = jnp.where(m[:, None, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bktgs,bskd->btkgd", probs, v)
+    return hint(out.reshape(B, T, h, hd), "dp", None, None, None)
+
+
+def causal_mask(T: int, S: int, offset: int = 0) -> jax.Array:
+    """True where query t (global index t+offset) may attend key s."""
+    qi = jnp.arange(T)[:, None] + offset
+    ki = jnp.arange(S)[None, :]
+    return ki <= qi
+
+
+def window_mask(T: int, S: int, window: int, offset: int = 0) -> jax.Array:
+    qi = jnp.arange(T)[:, None] + offset
+    ki = jnp.arange(S)[None, :]
+    return (ki <= qi) & (ki > qi - window)
+
+
+def _local_attention(q, k, v, window: int, dtype) -> jax.Array:
+    """Block-local sliding-window attention with O(T * 2*window) cost.
+
+    Pads T to a multiple of ``window``; each query block attends its own and
+    the previous key block, masked to exactly ``window`` history.
+    """
+    B, T, h, hd = q.shape
+    kv = k.shape[2]
+    W = window
+    Tp = (T + W - 1) // W * W
+    pad = Tp - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = Tp // W
+    g = h // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qb = hint(q.reshape(B, nb, W, h, hd), "dp", None, None, "model", None)
+    kb = hint(k.reshape(B, nb, W, h, hd), "dp", None, None, "model", None)
+    vb = hint(v.reshape(B, nb, W, h, hd), "dp", None, None, "model", None)
+    # keys for block i = concat(block i-1, block i): (B, nb, 2W, h, hd)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    logits = jnp.einsum("bnwhd,bnshd->bnhws", qb, k2).astype(jnp.float32)
+    logits = hint(logits / math.sqrt(hd), "dp", None, "model", None, None)
+    # in-block relative positions: query w (0..W-1) at global offset W + w
+    qi = jnp.arange(W)[:, None] + W
+    ki = jnp.arange(2 * W)[None, :]
+    m = (ki <= qi) & (ki > qi - W)                  # (W, 2W)
+    # first block has no previous block
+    first = jnp.arange(nb)[:, None, None] > 0
+    m = m[None] & (first | (ki[None] >= W))
+    logits = jnp.where(m[None, :, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(dtype)
+    out = jnp.einsum("bnhws,bnshd->bnwhd", probs, v2)
+    out = out.reshape(B, Tp, h, hd)
+    return out[:, :T]
+
+
+def attention_full(params: Params, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array, *, window: Optional[int] = None,
+                   causal: bool = True,
+                   segment_mask: Optional[jax.Array] = None,
+                   use_kernels: bool = False) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if use_kernels and causal and segment_mask is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    elif window is not None and causal and T > 2 * window and segment_mask is None:
+        out = _local_attention(q, k, v, window, x.dtype)
+    else:
+        if causal:
+            m = (window_mask(T, T, window) if window is not None
+                 else causal_mask(T, T))
+        else:
+            m = jnp.ones((T, T), dtype=bool)
+        if segment_mask is not None:
+            m = m & segment_mask
+        out = _sdpa(q, k, v, m[None] if m.ndim == 2 else m)
+    return out.reshape(B, T, -1) @ params["wo"].astype(x.dtype)
+
+
+# -- decode (one new token against a KV cache) ------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  window: Optional[int] = None, dtype=jnp.bfloat16) -> Params:
+    """KV cache for one attention layer. SWA layers use a ring buffer of
+    ``window`` slots; full layers allocate ``max_len``."""
+    S = min(max_len, window) if window is not None else max_len
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, S, kv, hd), dtype=dtype),
+        "v": jnp.zeros((batch, S, kv, hd), dtype=dtype),
+    }
+
+
+def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Params, pos: jax.Array, *,
+                     window: Optional[int] = None) -> Tuple[jax.Array, Params]:
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (current index).
+
+    Returns (y (B,1,D), new_cache).
+    """
+    B = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    S = cache["k"].shape[1]
+    slot = pos % S if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(S)
+    if window is not None:
+        # ring buffer of S = min(max_len, window) slots: before wrap-around
+        # only slots 0..pos are filled; after wrap every slot holds one of the
+        # last S (= window) positions, all of which are in-window.
+        valid = (idx <= slot) | (pos >= S)
+    else:
+        valid = idx <= pos
+    m = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
+    out = _sdpa_grouped(q, ck.astype(q.dtype), cv.astype(q.dtype), m)
+    y = out.reshape(B, 1, h * hd) @ params["wo"].astype(x.dtype)
+    return y, {"k": ck, "v": cv}
+
+
+# -- cross attention ---------------------------------------------------------
+
+
+def cross_attention_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    return attention_init(rng, cfg, dtype)
+
+
+def cross_kv(params: Params, cfg: ModelConfig, memory: jax.Array):
+    """Project the (encoder / vision) memory once; reused across decode steps."""
+    B, S, _ = memory.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = memory.dtype
+    k = (memory @ params["wk"].astype(dt)).reshape(B, S, kv, hd)
+    v = (memory @ params["wv"].astype(dt)).reshape(B, S, kv, hd)
+    return k, v
+
+
+def cross_attention_apply(params: Params, cfg: ModelConfig, x: jax.Array,
+                          k: jax.Array, v: jax.Array) -> jax.Array:
+    """x: (B,T,D) queries; k, v: projected memory (B,S,kv,hd)."""
+    B, T, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, T, h, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(params["q_norm"], q, cfg.norm.eps)
+    out = _sdpa(q, k.astype(dt), v.astype(dt), None)
+    return out.reshape(B, T, h * hd) @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d: int, d_ff: int, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, d_ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d), dtype=dtype),
+    }
+
+
+def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    hid = ("dp",) + (None,) * (x.ndim - 2) + ("model",)
+    g = hint(jax.nn.silu(x @ params["w_gate"].astype(dt)), *hid)
+    u = hint(x @ params["w_up"].astype(dt), *hid)
+    return (g * u) @ params["w_down"].astype(dt)

@@ -1,0 +1,59 @@
+"""F1 (Keskar et al. 2017): fully-connected MNIST model with (ghost) batch
+normalization after every hidden layer."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import VisionModelConfig
+from repro.models.layers import dense_init
+from repro.models.vision_common import norm_apply, norm_init
+
+Params = Dict[str, Any]
+
+
+def init(rng, cfg: VisionModelConfig) -> Tuple[Params, Params]:
+    h, w, c = cfg.input_shape
+    sizes = (h * w * c,) + tuple(cfg.hidden_sizes)
+    params: Params = {"layers": [], "out": None}
+    state: Params = {"layers": []}
+    for i, (din, dout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        r = jax.random.fold_in(rng, i)
+        np_, ns = norm_init(cfg, dout)
+        params["layers"].append({
+            "w": dense_init(r, (din, dout),
+                            scale=math.sqrt(2.0 / din)),
+            "b": jnp.zeros((dout,)),
+            "norm": np_,
+        })
+        state["layers"].append(ns)
+    params["out"] = {
+        "w": dense_init(jax.random.fold_in(rng, 999),
+                        (sizes[-1], cfg.n_classes),
+                        scale=math.sqrt(1.0 / sizes[-1])),
+        "b": jnp.zeros((cfg.n_classes,)),
+    }
+    return params, state
+
+
+def apply(params: Params, state: Params, cfg: VisionModelConfig,
+          x: jax.Array, *, training: bool = True,
+          ghost_batch_size: Optional[int] = None,
+          use_gbn: Optional[bool] = None,
+          use_kernels: bool = False) -> Tuple[jax.Array, Params]:
+    """x: (B, H, W, C) -> (logits (B, n_classes), new_state)."""
+    B = x.shape[0]
+    h = x.reshape(B, -1)
+    new_state = {"layers": []}
+    for lp, ls in zip(params["layers"], state["layers"]):
+        h = h @ lp["w"] + lp["b"]
+        h, ns = norm_apply(cfg, lp["norm"], ls, h, training=training,
+                           ghost_batch_size=ghost_batch_size,
+                           use_gbn=use_gbn, use_kernels=use_kernels)
+        new_state["layers"].append(ns)
+        h = jax.nn.relu(h)
+    logits = h @ params["out"]["w"] + params["out"]["b"]
+    return logits, new_state

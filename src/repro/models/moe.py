@@ -1,0 +1,154 @@
+"""Mixture-of-Experts feed-forward with top-k routing and capacity-based
+dispatch.
+
+Design notes (see DESIGN.md §5):
+
+- Routing and capacity are computed **per sequence**, so under data-parallel
+  sharding all routing bookkeeping is shard-local; only the expert GEMMs
+  touch the model-sharded expert weights. Compiled FLOPs equal the *active*
+  FLOPs (B * E * C * d * d_e with C = S * top_k / E * capacity_factor) —
+  dense all-expert dispatch would inflate them by E / top_k.
+- Dispatch is a scatter into a (B, E, C, d) buffer (not a one-hot matmul,
+  whose (T, E, C) dispatch tensor would be enormous at E=384).
+- Decode (S == 1) folds the batch into the token axis so capacity pools over
+  the batch. (Consequence, tested & documented: capacity *drops* can differ
+  between prefill and decode; with capacity_factor high enough to be
+  dropless the two match exactly.)
+- The load-balance auxiliary loss is the Switch/GShard form
+  ``E * sum_e f_e * P_e``; a router z-loss is optional.
+- Expert-parallel placement comes from the param specs (sharding/rules.py):
+  experts over the "model" axis (``shard_axis="expert"``), or each expert's
+  hidden dim (``shard_axis="ffn"`` when E % mesh_model != 0, e.g. qwen2's 60
+  experts); activation hints keep the dispatch buffer expert-sharded.
+  The beyond-paper optimized path (shard_map + all_to_all) lives in
+  ``repro/core/expert_parallel.py``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import expert_parallel as EP
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+from repro.sharding.hints import current_mesh, hint
+
+Params = Dict[str, Any]
+
+
+def moe_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (m.n_experts, d, m.d_expert), dtype=dtype),
+        "w_up": dense_init(ks[2], (m.n_experts, d, m.d_expert), dtype=dtype),
+        "w_down": dense_init(ks[3], (m.n_experts, m.d_expert, d), dtype=dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, m.d_shared, dtype=dtype)
+    return p
+
+
+def _route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
+    """x: (B, S, d) -> (topi, topw (B,S,k), aux losses)."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, m.top_k)                      # (B,S,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    sel = jax.nn.one_hot(topi[..., 0], m.n_experts, dtype=jnp.float32)
+    f = sel.mean(axis=(0, 1))
+    P = probs.mean(axis=(0, 1))
+    aux = m.n_experts * jnp.sum(f * P)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    return topi, topw, {"moe_aux": aux, "moe_z": z}
+
+
+def _expert_ff(p: Params, m: MoEConfig, buf: jax.Array) -> jax.Array:
+    """buf: (B, E, C, d) -> (B, E, C, d) through the per-expert SwiGLU."""
+    dt = buf.dtype
+    e_ax = "model" if m.shard_axis == "expert" else None
+    f_ax = None if m.shard_axis == "expert" else "model"
+    buf = hint(buf, "dp", e_ax, None, None)
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt)))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dt))
+    h = hint(g * u, "dp", e_ax, None, f_ax)
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+    return hint(y, "dp", e_ax, None, None)
+
+
+def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y (B, S, d), aux losses)."""
+    m = cfg.moe
+    B0, S0, d = x.shape
+    dt = x.dtype
+
+    decode = S0 == 1
+    if decode:
+        # decode: pool capacity over the batch (one "sequence" of B tokens)
+        x = x.reshape(1, B0, d)
+    B, S, _ = x.shape
+    E, k = m.n_experts, m.top_k
+    C = m.tokens_capacity(S)
+
+    topi, topw, aux = _route(params["router"], x, m)        # (B,S,k)
+
+    # position of assignment (t, j) within its expert, ordered by (t, j).
+    # Sort-based (O(S*k log) time, O(S*k) memory) — the naive one-hot cumsum
+    # would materialise an (S*k, E) tensor (e.g. 32768 x 384 per sequence for
+    # kimi-k2) and dominate HBM; see EXPERIMENTS.md §Perf.
+    Tk = S * k
+    e_flat = topi.reshape(B, Tk)
+    order = jnp.argsort(e_flat, axis=1, stable=True)        # (B, Tk)
+    sorted_e = jnp.take_along_axis(e_flat, order, axis=1)
+    idx = jnp.arange(Tk, dtype=jnp.int32)[None]
+    change = jnp.concatenate(
+        [jnp.ones((B, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]], axis=1)
+    seg_start = jax.lax.cummax(jnp.where(change, idx, 0), axis=1)
+    pos_sorted = idx - seg_start                            # rank within expert
+    # invert the permutation: slot[b, order[b, i]] = pos_sorted[b, i]
+    slot_flat = jnp.zeros((B, Tk), jnp.int32).at[
+        jnp.arange(B)[:, None], order].set(pos_sorted)
+    slot = slot_flat.reshape(B, S, k)
+    keep = slot < C
+
+    mesh = current_mesh()
+    if EP.ep_applicable(m, mesh, B, 1 if decode else 0):
+        # production path: shard_map expert parallelism (see
+        # core/expert_parallel.py) — one psum per layer, no global
+        # scatter/gather across the expert-sharded dim.
+        y = EP.ep_dispatch_combine(params, m, x, topi, topw, slot, keep, C,
+                                   mesh, batch_axis=1 if decode else 0)
+    else:
+        # local/global fallback (CPU tests; 'ffn'-sharded experts e.g.
+        # qwen2's 60): buffer is data-sharded only, scatter/gather local.
+        # One k-assignment at a time keeps the transient at (B, S, d).
+        s_idx = jnp.where(keep, slot, 0)
+        b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S)).reshape(-1)
+        buf = jnp.zeros((B, E, C, d), dtype=dt)
+        for j in range(k):
+            xj = x * keep[:, :, j, None].astype(dt)
+            buf = buf.at[b_idx, topi[:, :, j].reshape(-1),
+                         s_idx[:, :, j].reshape(-1)].add(
+                xj.reshape(-1, d), mode="drop")
+
+        y_buf = _expert_ff(params, m, buf)                  # (B, E, C, d)
+
+        y = jnp.zeros((B, S, d), dtype=dt)
+        for j in range(k):
+            yj = y_buf[b_idx, topi[:, :, j].reshape(-1),
+                       s_idx[:, :, j].reshape(-1)].reshape(B, S, d)
+            y = y + yj * (topw[:, :, j].astype(dt)
+                          * keep[:, :, j].astype(dt))[..., None]
+
+    if decode:
+        y = y.reshape(B0, S0, d)
+        x = x.reshape(B0, S0, d)
+    if m.n_shared_experts:
+        y = y + mlp_apply(params["shared"], x)
+    return y.astype(dt), aux

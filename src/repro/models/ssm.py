@@ -1,0 +1,199 @@
+"""Mamba-1 selective state-space mixer.
+
+Training / prefill uses a chunked scan: ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, d_state) hidden state, with a parallel
+(associative) scan inside each chunk. This bounds the materialised
+(B, chunk, d_inner, d_state) tensor while keeping the sequential depth at
+S / chunk — the TPU-native adaptation of the CUDA selective-scan kernel
+(see also kernels/mamba_scan.py for the Pallas version of the inner chunk).
+
+Decode is the O(1)-per-token recurrence with a ring conv state.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ref as SSM_REF
+from repro.models.layers import dense_init
+from repro.sharding.hints import hint
+
+Params = Dict[str, Any]
+
+DEFAULT_CHUNK = 256
+
+# §Perf P2 ablation: sequential-in-time inner scan instead of the
+# associative scan — h is carried step to step (2 h-sized r/w per step)
+# instead of log2(c) full-chunk combiner passes. This is the pure-JAX
+# approximation of what the Pallas kernel does with h resident in VMEM.
+_SEQ_SCAN = os.environ.get("REPRO_MAMBA_SEQ_SCAN", "0") == "1"
+
+
+def ssm_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    dtr = s.resolved_dt_rank(d)
+    ks = jax.random.split(rng, 6)
+    # S4/Mamba init: A = -(1..d_state) broadcast over channels
+    a = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+                 (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype=dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * s.d_state), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype=jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), dtype=jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype=dtype),
+    }
+
+
+def _split_in(params: Params, cfg: ModelConfig, x: jax.Array):
+    dt = x.dtype
+    di = cfg.ssm.d_inner(cfg.d_model)
+    xz = x @ params["in_proj"].astype(dt)
+    return xz[..., :di], xz[..., di:]
+
+
+def _bcdt(params: Params, cfg: ModelConfig, xc: jax.Array):
+    """xc: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    s = cfg.ssm
+    dtr = s.resolved_dt_rank(cfg.d_model)
+    proj = xc @ params["x_proj"].astype(xc.dtype)
+    dt_in, B, C = (proj[..., :dtr], proj[..., dtr:dtr + s.d_state],
+                   proj[..., dtr + s.d_state:])
+    dt = jax.nn.softplus(
+        (dt_in @ params["dt_proj"].astype(xc.dtype)).astype(jnp.float32)
+        + params["dt_bias"])
+    return dt, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _causal_conv_full(params: Params, cfg: ModelConfig, x: jax.Array,
+                      conv_state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over (B, S, di)."""
+    k = cfg.ssm.d_conv
+    w = params["conv_w"].astype(x.dtype)            # (k, di)
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def _chunk_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """Within-chunk parallel scan of h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (B, c, di, ds); h0: (B, di, ds). Returns (h_all (B,c,di,ds), h_last).
+    """
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def ssm_forward(params: Params, cfg: ModelConfig, x: jax.Array,
+                chunk: int = DEFAULT_CHUNK,
+                use_kernels: bool = False) -> jax.Array:
+    """Full-sequence mamba mixer. x: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = x.shape
+    dt_ = x.dtype
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    xin, z = _split_in(params, cfg, x)
+    xin = hint(xin, "dp", None, "model")
+    xc = hint(jax.nn.silu(_causal_conv_full(params, cfg, xin)),
+              "dp", None, "model")
+    dt, Bmat, Cmat = _bcdt(params, cfg, xc)          # (B,S,di) (B,S,ds) (B,S,ds)
+    dt = hint(dt, "dp", None, "model")
+    A = -jnp.exp(params["A_log"])                    # (di, ds)
+
+    c = min(chunk, S)
+    if S % c:
+        # pad to a chunk multiple (padded steps have dt=0 -> identity updates)
+        pad = c - S % c
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_p = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        C_p = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    else:
+        pad = 0
+        xc_p, dt_p, B_p, C_p = xc, dt, Bmat, Cmat
+    Sp = S + pad
+    nch = Sp // c
+
+    def step(h, inputs):
+        xc_c, dt_c, B_c, C_c = inputs                # (B,c,di) (B,c,di) (B,c,ds)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            y_c, h = kops.mamba_chunk(xc_c.astype(jnp.float32), dt_c, B_c,
+                                      C_c, A, h)
+        elif _SEQ_SCAN:
+            y_c, h = SSM_REF.mamba_chunk_ref(
+                xc_c.astype(jnp.float32), dt_c, B_c, C_c, A, h)
+        else:
+            a = hint(jnp.exp(dt_c[..., None] * A),
+                     "dp", None, "model", None)                   # (B,c,di,ds)
+            b = hint((dt_c * xc_c.astype(jnp.float32))[..., None]
+                     * B_c[:, :, None, :], "dp", None, "model", None)
+            h_all, h = _chunk_scan(a, b, h)
+            h = hint(h, "dp", "model", None)
+            y_c = jnp.einsum("bcds,bcs->bcd", h_all, C_c)
+        return h, y_c
+
+    xs = (xc_p.reshape(B, nch, c, di).swapaxes(0, 1),
+          dt_p.reshape(B, nch, c, di).swapaxes(0, 1),
+          B_p.reshape(B, nch, c, s.d_state).swapaxes(0, 1),
+          C_p.reshape(B, nch, c, s.d_state).swapaxes(0, 1))
+    h0 = jnp.zeros((B, di, s.d_state), dtype=jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(dt_) * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dt_)
+
+
+# -- decode ------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    return {
+        "h": jnp.zeros((batch, di, s.d_state), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), dtype=dtype),
+    }
+
+
+def ssm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+               cache: Params) -> Tuple[jax.Array, Params]:
+    """One-token recurrent step. x: (B, 1, d_model)."""
+    B = x.shape[0]
+    dt_ = x.dtype
+    s = cfg.ssm
+    xin, z = _split_in(params, cfg, x)               # (B,1,di)
+    xc = jax.nn.silu(
+        _causal_conv_full(params, cfg, xin, conv_state=cache["conv"]))
+    new_conv = jnp.concatenate(
+        [cache["conv"][:, 1:], xin.astype(cache["conv"].dtype)], axis=1)
+    dt, Bmat, Cmat = _bcdt(params, cfg, xc)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)               # (B,di,ds)
+    b = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bmat[:, 0, None, :]
+    h = a * cache["h"] + b
+    y = jnp.einsum("bds,bs->bd", h, Cmat[:, 0])
+    y = y + params["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(dt_)) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,44 @@
+"""Shared pieces for the paper's vision/MLP models: norm dispatch (GBN vs
+conventional full-batch BN vs none) with explicit running-state threading."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_models import VisionModelConfig
+from repro.core import gbn as GBN
+
+Params = Dict[str, Any]
+
+
+def norm_init(cfg: VisionModelConfig, n_features: int
+              ) -> Tuple[Params, Params]:
+    if cfg.norm == "none":
+        return {}, {}
+    return GBN.gbn_init(n_features)
+
+
+def norm_apply(cfg: VisionModelConfig, params: Params, state: Params,
+               x: jax.Array, *, training: bool,
+               ghost_batch_size: Optional[int] = None,
+               use_gbn: Optional[bool] = None,
+               use_kernels: bool = False) -> Tuple[jax.Array, Params]:
+    """x: (B, ..., C). Dispatches GBN / equal-weight BN / identity.
+
+    ``use_gbn=False`` degrades GBN to conventional full-batch BN (the LB
+    baseline); ``ghost_batch_size`` overrides the config (LargeBatchConfig
+    controls it at train time).
+    """
+    if cfg.norm == "none":
+        return x, state
+    gbs = ghost_batch_size or cfg.ghost_batch_size
+    gbn_on = cfg.norm == "gbn" if use_gbn is None else use_gbn
+    if gbn_on:
+        return GBN.gbn_apply(params, state, x, ghost_batch_size=gbs,
+                             momentum=cfg.bn_momentum, training=training,
+                             use_kernels=use_kernels)
+    return GBN.equal_weight_bn_apply(params, state, x,
+                                     momentum=cfg.bn_momentum,
+                                     training=training)

@@ -1,0 +1,5 @@
+from repro.optim import adam, sgd
+from repro.optim.adam import AdamState
+from repro.optim.sgd import SGDState
+
+__all__ = ["adam", "sgd", "AdamState", "SGDState"]

@@ -1,0 +1,3 @@
+from repro.serving.engine import generate, make_serve_step, prefill
+
+__all__ = ["generate", "make_serve_step", "prefill"]

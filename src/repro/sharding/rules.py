@@ -1,0 +1,197 @@
+"""Parameter / activation PartitionSpec rules (Megatron + FSDP hybrid).
+
+Weights are sharded along their "model-parallel" dimension over the mesh's
+``model`` axis (attention fused head dim, MLP hidden dim, MoE expert axis)
+AND fully-sharded along a second dimension over the data axes (FSDP /
+ZeRO-3 style) so trillion-parameter configs fit pod HBM. GSPMD inserts the
+FSDP all-gathers.
+
+Every rule degrades gracefully: an axis is only applied if the corresponding
+dimension is divisible by the mesh axis size (otherwise that dimension is
+replicated) — this is what makes e.g. qwen2's 60 experts or phi3's 40 heads
+lower cleanly (the *fused* head*head_dim projections are always divisible).
+
+Specs are derived by walking the parameter pytree's path strings, so any
+new substrate that follows the naming conventions (wq/wk/wv/wo, w_gate/w_up/
+w_down, in_proj/out_proj, embed/head) inherits correct sharding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, fsdp_axes
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    """Is `dim` divisible by the (possibly tuple) mesh axis size?"""
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+    else:
+        size = mesh.shape[axis]
+    return dim % size == 0
+
+
+def _spec(mesh, shape, *axes) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide evenly."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# (path regex, axes per trailing dim) — longest-match wins; the leading
+# stacked-layer dim of scanned body params is prepended automatically.
+def _param_rule(path: str, shape: Tuple[int, ...], mesh, fsdp) -> P:
+    ndim = len(shape)
+
+    def spec(*axes):
+        return _spec(mesh, shape, *axes)
+
+    # --- embeddings / unembedding: (V, D) -> vocab on model, D fsdp
+    if re.search(r"(^|/)(embed|head)$", path) and ndim == 2:
+        return spec("model", fsdp)
+    # --- norms, biases, small vectors: replicated
+    if re.search(r"(norm|scale|bias|gamma|beta|dt_bias|(^|/)D$)", path):
+        return P(*([None] * ndim))
+    # --- MoE ---
+    if "/ff/router" in path:
+        return P(*([None] * ndim))
+    if re.search(r"/ff/w_(gate|up)$", path) and ndim == 3:
+        # (E, D, d_expert): expert-sharded (or ffn-sharded fallback)
+        if _fits(shape[0], mesh, "model"):
+            return spec("model", fsdp, None)
+        return spec(None, fsdp, "model")
+    if re.search(r"/ff/w_down$", path) and ndim == 3:
+        if _fits(shape[0], mesh, "model"):
+            return spec("model", None, fsdp)
+        return spec(None, "model", fsdp)
+    # --- dense mlp / shared expert: (D, F) and (F, D)
+    if re.search(r"w_(gate|up)$", path) and ndim == 2:
+        return spec(fsdp, "model")
+    if re.search(r"w_down$", path) and ndim == 2:
+        return spec("model", fsdp)
+    # --- attention: fused (D, H*hd) / (H*hd, D)
+    if re.search(r"w[qkv]$", path) and ndim == 2:
+        return spec(fsdp, "model")
+    if re.search(r"wo$", path) and ndim == 2:
+        return spec("model", fsdp)
+    # --- mamba ---
+    if re.search(r"in_proj$", path):
+        return spec(fsdp, "model")
+    if re.search(r"out_proj$", path):
+        return spec("model", fsdp)
+    if re.search(r"conv_w$", path):
+        return spec(None, "model")
+    if re.search(r"x_proj$", path):
+        return spec("model", None)
+    if re.search(r"dt_proj$", path):
+        return spec(None, "model")
+    if re.search(r"A_log$", path):
+        return spec("model", None)
+    # --- vision head (paper models) and anything else: replicate
+    return P(*([None] * ndim))
+
+
+def param_specs(params_or_shapes: Any, mesh, cfg=None) -> Any:
+    """PartitionSpec pytree matching the parameter pytree.
+
+    Stacked body params (path contains ``stack/body``) get a leading None
+    for the scan dimension.
+    """
+    fsdp = fsdp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        stacked = "stack/body" in p or re.search(r"(^|/)body/", p)
+        if stacked:
+            inner = _param_rule(p, shape[1:], mesh, fsdp)
+            return P(None, *inner)
+        return _param_rule(p, shape, mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)
+
+
+def param_shardings(params_or_shapes: Any, mesh, cfg=None) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_or_shapes, mesh, cfg))
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh, global_batch: int, ndim: int = 2) -> P:
+    """Shard the batch dim over the data(+pod) axes when divisible."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    if not _fits(global_batch, mesh, dp):
+        dp = None
+    return P(dp, *([None] * (ndim - 1)))
+
+
+def cache_specs(cache: Any, mesh, global_batch: int) -> Any:
+    """KV/SSM/cross cache specs: batch over data axes; kv cache prefers
+    kv-head sharding over 'model' (update_slice stays shard-local — the
+    seq-sharded variant forces an SPMD full rematerialization on every token,
+    see EXPERIMENTS.md §Perf); falls back to sharding the cache sequence
+    when kv_heads doesn't divide (decode softmax reduces over it with an
+    all-reduce). Mamba state shards d_inner over 'model'."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    b_ax = dp if _fits(global_batch, mesh, dp) else None
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        # strip the stacked body dim
+        stacked = "body" in p.split("/")
+        core = shape[1:] if stacked else shape
+        if p.endswith("/h"):          # (B, d_inner, d_state)
+            inner = _spec(mesh, core, b_ax, "model", None)
+        elif p.endswith("/conv"):     # (B, k-1, d_inner)
+            inner = _spec(mesh, core, b_ax, None, "model")
+        elif "cross_" in p:           # (B, mem, kv, hd)
+            inner = _spec(mesh, core, b_ax, None, "model", None)
+        else:                         # k/v: (B, S, kv, hd)
+            if _fits(core[2], mesh, "model"):
+                inner = _spec(mesh, core, b_ax, None, "model", None)
+            else:
+                inner = _spec(mesh, core, b_ax, "model", None, None)
+        if stacked:
+            return P(None, *inner)
+        return inner
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def to_shardings(spec_tree: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        spec_tree, is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,8 @@
+from repro.train.trainer import (make_lm_eval_step, make_lm_train_step,
+                                 make_vision_eval, make_vision_train_step,
+                                 train_vision)
+
+__all__ = [
+    "make_lm_eval_step", "make_lm_train_step", "make_vision_eval",
+    "make_vision_train_step", "train_vision",
+]

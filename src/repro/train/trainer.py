@@ -1,0 +1,195 @@
+"""Training loops wiring the large-batch toolkit into both model classes.
+
+- ``make_lm_train_step``: next-token LM training for the assigned
+  architectures (momentum SGD + clipping + noise + regime LR). The returned
+  step is pjit-compatible: (params, opt_state, batch, step, rng) ->
+  (params, opt_state, metrics).
+- ``make_vision_train_step`` / ``train_vision``: the paper's Table-1 style
+  experiments — models with (ghost) BN running state, SB/LB/+LR/+GBN/+RA
+  presets, weight-distance (diffusion) tracking.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.paper_models import VisionModelConfig
+from repro.core.diffusion import DiffusionTracker
+from repro.core.large_batch import LargeBatchConfig
+from repro.core.regime import Regime
+from repro.models import transformer as T
+from repro.optim import sgd
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# LM training (assigned architectures)
+# ---------------------------------------------------------------------------
+
+
+def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
+                       regime: Regime, *, weight_decay: float = 0.0,
+                       use_kernels: bool = False,
+                       momentum_dtype: str = "float32",
+                       remat: bool = False,
+                       seq_parallel: bool = False,
+                       ce_chunk: int = 0) -> Callable:
+    """Build the jit-able LM train step implementing the paper's recipe."""
+    sigma = lb.effective_noise_sigma()
+
+    def train_step(params: Params, opt_state: sgd.SGDState,
+                   batch: Dict[str, jax.Array], step: jax.Array,
+                   rng: jax.Array):
+        def loss_fn(p):
+            return T.lm_loss(p, cfg, batch, use_kernels=use_kernels,
+                             remat=remat, seq_parallel=seq_parallel,
+                             ce_chunk=ce_chunk)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = regime.lr_at(step)
+        params2, opt_state2, opt_metrics = sgd.update(
+            grads, opt_state, params,
+            lr=lr, momentum=lb.momentum, nesterov=lb.nesterov,
+            weight_decay=weight_decay, grad_clip=lb.grad_clip,
+            noise_sigma=sigma, rng=rng, momentum_dtype=momentum_dtype)
+        metrics = {"loss": loss, "lr": lr, **metrics, **opt_metrics}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_lm_eval_step(cfg: ModelConfig, use_kernels: bool = False) -> Callable:
+    def eval_step(params: Params, batch: Dict[str, jax.Array]):
+        loss, metrics = T.lm_loss(params, cfg, batch,
+                                  use_kernels=use_kernels)
+        return metrics["ce"]
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Vision training (the paper's own experiments)
+# ---------------------------------------------------------------------------
+
+
+def make_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
+                           lb: LargeBatchConfig, regime: Regime,
+                           *, weight_decay: float = 5e-4,
+                           use_kernels: bool = False) -> Callable:
+    """Vision train step with GBN state threading.
+
+    ``lb.use_gbn`` selects ghost vs full-batch statistics;
+    ``lb.ghost_batch_size`` is Alg. 1's |B_S|.
+    """
+    sigma = lb.effective_noise_sigma()
+
+    def train_step(params: Params, bn_state: Params, opt_state: sgd.SGDState,
+                   x: jax.Array, y: jax.Array, step: jax.Array,
+                   rng: jax.Array):
+        def loss_fn(p):
+            logits, new_state = model_apply(
+                p, bn_state, cfg, x, training=True,
+                ghost_batch_size=lb.ghost_batch_size,
+                use_gbn=lb.use_gbn, use_kernels=use_kernels)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+            acc = (logits.argmax(-1) == y).mean()
+            return nll, (new_state, acc)
+
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr = regime.lr_at(step)
+        params2, opt_state2, m = sgd.update(
+            grads, opt_state, params, lr=lr, momentum=lb.momentum,
+            weight_decay=weight_decay, grad_clip=lb.grad_clip,
+            noise_sigma=sigma, rng=rng)
+        return params2, new_state, opt_state2, {
+            "loss": loss, "acc": acc, "lr": lr, **m}
+
+    return train_step
+
+
+def make_vision_eval(model_apply: Callable, cfg: VisionModelConfig
+                     ) -> Callable:
+    @jax.jit
+    def eval_batch(params, bn_state, x, y):
+        logits, _ = model_apply(params, bn_state, cfg, x, training=False)
+        return (logits.argmax(-1) == y).sum()
+
+    def evaluate(params, bn_state, x, y, batch: int = 512) -> float:
+        correct = 0
+        for i in range(0, x.shape[0], batch):
+            correct += int(eval_batch(params, bn_state,
+                                      x[i:i + batch], y[i:i + batch]))
+        return correct / x.shape[0]
+
+    return evaluate
+
+
+def train_vision(model_fns, cfg: VisionModelConfig, data,
+                 lb: LargeBatchConfig, regime: Regime, *, seed: int = 0,
+                 eval_every: int = 0, track_diffusion: bool = True,
+                 log_fn: Optional[Callable[[str], None]] = None,
+                 use_kernels: bool = False,
+                 weight_decay: float = 5e-4) -> Dict[str, Any]:
+    """Full training run; returns final/best accuracy + diffusion trace."""
+    init_fn, apply_fn = model_fns
+    rng = jax.random.PRNGKey(seed)
+    params, bn_state = init_fn(rng, cfg)
+    opt_state = sgd.init(params)
+    step_fn = jax.jit(make_vision_train_step(
+        apply_fn, cfg, lb, regime, use_kernels=use_kernels,
+        weight_decay=weight_decay))
+    evaluate = make_vision_eval(apply_fn, cfg)
+    tracker = DiffusionTracker(params) if track_diffusion else None
+
+    nprng = np.random.RandomState(seed + 1)
+    x_tr, y_tr = data.x_train, data.y_train
+    n = x_tr.shape[0]
+    steps_per_epoch = max(1, n // lb.batch_size)
+    history = {"val_acc": [], "train_loss": [], "steps": [],
+               "distance": [], "dist_steps": []}
+    best = 0.0
+    step = 0
+    while step < regime.total_steps:
+        for idx in np.array_split(nprng.permutation(n),
+                                  max(1, n // lb.batch_size)):
+            if step >= regime.total_steps:
+                break
+            if idx.size < lb.batch_size:
+                continue
+            x = jnp.asarray(x_tr[idx])
+            y = jnp.asarray(y_tr[idx])
+            params, bn_state, opt_state, m = step_fn(
+                params, bn_state, opt_state, x, y, jnp.int32(step),
+                jax.random.fold_in(rng, step))
+            if tracker is not None and (
+                    step < 32 or step % max(1, regime.total_steps // 64) == 0):
+                d = tracker.record(step + 1, params)
+                history["distance"].append(d)
+                history["dist_steps"].append(step + 1)
+            if eval_every and step % eval_every == 0:
+                acc = evaluate(params, bn_state, data.x_test, data.y_test)
+                history["val_acc"].append(acc)
+                history["steps"].append(step)
+                history["train_loss"].append(float(m["loss"]))
+                best = max(best, acc)
+                if log_fn:
+                    log_fn(f"step {step:5d} loss {float(m['loss']):.4f} "
+                           f"val_acc {acc:.4f} lr {float(m['lr']):.4f}")
+            step += 1
+    final = evaluate(params, bn_state, data.x_test, data.y_test)
+    train_acc = evaluate(params, bn_state, x_tr[:2048], y_tr[:2048])
+    out = {"final_acc": final, "best_acc": max(best, final),
+           "train_acc": train_acc, "history": history, "steps": step}
+    if tracker is not None:
+        out["log_fit"] = tracker.log_fit(burn_in=2)
+        out["power_fit"] = tracker.power_fit(burn_in=2)
+    return out

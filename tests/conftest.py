@@ -1,0 +1,19 @@
+import dataclasses
+
+import jax
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see the single real device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def reduced_cfg(arch: str, **overrides):
+    """Float32 reduced config for CPU numerics."""
+    from repro.configs.registry import get_config
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, dtype="float32", **overrides)

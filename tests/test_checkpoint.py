@@ -1,0 +1,36 @@
+"""Checkpoint save/restore roundtrip."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.optim import sgd
+
+
+def test_roundtrip(tmp_path):
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32", body_repeats=1)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = sgd.init(params)
+    save(str(tmp_path), 7, params, opt, extra={"arch": cfg.name})
+    assert latest_step(str(tmp_path)) == 7
+    template = jax.tree.map(jnp.zeros_like, params)
+    restored, step = restore(str(tmp_path), template)
+    assert step == 7
+    flat_a = jax.tree.leaves(params)
+    flat_b = jax.tree.leaves(restored)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ropt, _ = restore(str(tmp_path), jax.tree.map(jnp.zeros_like, opt),
+                      kind="opt")
+    np.testing.assert_array_equal(np.asarray(ropt.step), np.asarray(opt.step))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path), {"w": jnp.zeros(())})

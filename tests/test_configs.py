@@ -1,0 +1,83 @@
+"""Config/registry invariants: the 10 assigned architectures, layer counts,
+parameter counts vs their public sizes, shape applicability rules."""
+import pytest
+
+from repro.configs.base import INPUT_SHAPES, shape_applicable
+from repro.configs.registry import combos, get_config, list_archs
+
+EXPECTED_LAYERS = {
+    "kimi-k2-1t-a32b": 61,
+    "falcon-mamba-7b": 64,
+    "gemma3-27b": 62,
+    "jamba-v0.1-52b": 32,
+    "seamless-m4t-large-v2": 24,
+    "qwen2-moe-a2.7b": 24,
+    "qwen3-1.7b": 28,
+    "llama-3.2-vision-11b": 40,
+    "phi3-medium-14b": 40,
+    "h2o-danube-3-4b": 24,
+}
+
+# (total params, active params) in billions, with generous tolerance —
+# these anchor the configs to the public model sizes.
+EXPECTED_PARAMS_B = {
+    "kimi-k2-1t-a32b": (1027, 34),
+    "falcon-mamba-7b": (7.3, 7.3),
+    "gemma3-27b": (28.4, 28.4),
+    "jamba-v0.1-52b": (51.6, 12.1),
+    "seamless-m4t-large-v2": (2.0, 2.0),
+    "qwen2-moe-a2.7b": (14.3, 2.7),
+    "qwen3-1.7b": (1.7, 1.7),
+    "llama-3.2-vision-11b": (10.1, 10.1),
+    "phi3-medium-14b": (14.7, 14.7),
+    "h2o-danube-3-4b": (4.0, 4.0),
+}
+
+
+def test_ten_archs_registered():
+    assert len(list_archs()) == 10
+    assert set(list_archs()) == set(EXPECTED_LAYERS)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_LAYERS))
+def test_layer_count(arch):
+    assert get_config(arch).n_layers == EXPECTED_LAYERS[arch]
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_PARAMS_B))
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    total, active = EXPECTED_PARAMS_B[arch]
+    assert cfg.param_count() / 1e9 == pytest.approx(total, rel=0.12)
+    assert cfg.active_param_count() / 1e9 == pytest.approx(active, rel=0.15)
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED_LAYERS))
+def test_reduced_is_small(arch):
+    r = get_config(arch).reduced()
+    assert r.d_model <= 512
+    assert len(r.layers) <= 16
+    if r.moe is not None:
+        assert r.moe.n_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_input_shapes():
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_long_context_applicability():
+    runs = {a for a, s, ok, _ in combos(include_inapplicable=True)
+            if s == "long_500k" and ok}
+    assert runs == {"falcon-mamba-7b", "jamba-v0.1-52b", "gemma3-27b",
+                    "h2o-danube-3-4b"}
+    n_total = len(list(combos(include_inapplicable=True)))
+    assert n_total == 40
+
+
+def test_padded_vocab_shards():
+    for arch in list_archs():
+        assert get_config(arch).padded_vocab % 16 == 0

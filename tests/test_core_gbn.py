@@ -1,0 +1,103 @@
+"""Ghost Batch Normalization (paper Algorithm 1) — unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gbn import (_cascaded_ema, equal_weight_bn_apply, gbn_apply,
+                            gbn_init)
+
+
+def test_ghost_stats_match_small_batch_bn():
+    """GBN over B=G*gbs must equal plain BN applied to each ghost slice."""
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (64, 8)) * 3.0 + 1.0
+    params, state = gbn_init(8)
+    y, _ = gbn_apply(params, state, x, ghost_batch_size=16)
+    for g in range(4):
+        sl = x[16 * g: 16 * (g + 1)]
+        mu = sl.mean(0)
+        var = sl.var(0)
+        ref = (sl - mu) / jnp.sqrt(var + 1e-5)
+        np.testing.assert_allclose(y[16 * g: 16 * (g + 1)], ref,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_single_ghost_equals_plain_bn():
+    rng = jax.random.PRNGKey(1)
+    x = jax.random.normal(rng, (32, 4))
+    params, state = gbn_init(4)
+    y_g, _ = gbn_apply(params, state, x, ghost_batch_size=32)
+    y_b, _ = equal_weight_bn_apply(params, state, x)
+    np.testing.assert_allclose(y_g, y_b, rtol=1e-5, atol=1e-5)
+
+
+def test_cascaded_ema_equals_sequential():
+    """The closed form must equal folding ghosts in one at a time."""
+    run = jnp.asarray([1.0, -2.0])
+    ghosts = jnp.asarray([[0.5, 0.5], [2.0, -1.0], [3.0, 0.0]])
+    eta = 0.1
+    seq = run
+    for g in ghosts:
+        seq = (1 - eta) * seq + eta * g
+    closed = _cascaded_ema(run, ghosts, eta)
+    np.testing.assert_allclose(closed, seq, rtol=1e-6)
+
+
+def test_inference_uses_running_stats():
+    rng = jax.random.PRNGKey(2)
+    params, state = gbn_init(4)
+    x = jax.random.normal(rng, (64, 4)) * 2.0 + 3.0
+    for i in range(20):
+        xi = jax.random.normal(jax.random.fold_in(rng, i), (64, 4)) * 2.0 + 3.0
+        _, state = gbn_apply(params, state, xi, ghost_batch_size=16)
+    y, state2 = gbn_apply(params, state, x, ghost_batch_size=16,
+                          training=False)
+    # running stats should have converged near the true moments
+    np.testing.assert_allclose(state["mu_run"], 3.0, atol=0.5)
+    np.testing.assert_allclose(jnp.sqrt(state["var_run"]), 2.0, atol=0.5)
+    # inference must not update state
+    assert state2 is state
+
+
+def test_conv_layout_stats_over_spatial():
+    """(B, H, W, C): statistics reduce over batch and spatial dims."""
+    rng = jax.random.PRNGKey(3)
+    x = jax.random.normal(rng, (16, 4, 4, 3))
+    params, state = gbn_init(3)
+    y, _ = gbn_apply(params, state, x, ghost_batch_size=8)
+    first = x[:8].reshape(-1, 3)
+    mu, var = first.mean(0), first.var(0)
+    ref = (x[:8] - mu) / jnp.sqrt(var + 1e-5)
+    np.testing.assert_allclose(y[:8], ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_mult=st.integers(1, 4),
+    gbs=st.sampled_from([4, 8, 16]),
+    c=st.integers(1, 9),
+    scale=st.floats(0.1, 10.0),
+)
+def test_property_normalized_moments(b_mult, gbs, c, scale):
+    """Every ghost slice of the output has ~zero mean and ~unit variance."""
+    B = gbs * b_mult
+    x = scale * jax.random.normal(jax.random.PRNGKey(b_mult * 100 + c),
+                                  (B, c)) + scale
+    params, state = gbn_init(c)
+    y, _ = gbn_apply(params, state, x, ghost_batch_size=gbs)
+    yg = np.asarray(y).reshape(b_mult, gbs, c)
+    np.testing.assert_allclose(yg.mean(axis=1), 0.0, atol=1e-3)
+    np.testing.assert_allclose(yg.var(axis=1), 1.0, atol=2e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(gbs=st.sampled_from([8, 16, 32]))
+def test_property_invariant_to_affine_input(gbs):
+    """GBN(a*x+b) == GBN(x) for per-batch affine maps (scale invariance)."""
+    x = jax.random.normal(jax.random.PRNGKey(gbs), (32, 5))
+    params, state = gbn_init(5)
+    y1, _ = gbn_apply(params, state, x, ghost_batch_size=gbs)
+    y2, _ = gbn_apply(params, state, 5.0 * x + 2.0, ghost_batch_size=gbs)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)

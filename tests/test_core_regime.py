@@ -1,0 +1,119 @@
+"""LR scaling (paper eq. 7), Regime Adaptation (paper §5), noise matching
+(paper §4) — unit + property tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.large_batch import LargeBatchConfig, presets
+from repro.core.lr_scaling import noise_sigma, scale_lr
+from repro.core.noise import ghost_noise_grads, multiplicative_noise_grads
+from repro.core.regime import Regime, adapt_regime
+
+
+def test_sqrt_scaling():
+    assert scale_lr(0.1, 4096, 128, "sqrt") == pytest.approx(
+        0.1 * math.sqrt(32))
+    assert scale_lr(0.1, 4096, 128, "linear") == pytest.approx(0.1 * 32)
+    assert scale_lr(0.1, 4096, 128, "none") == 0.1
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 16))
+def test_property_update_covariance_constant_under_sqrt(m):
+    """cov(eta*ghat) is ~constant in M when eta ~ sqrt(M) (paper eq. 6-7).
+
+    Simulated with per-sample gradients g_n ~ N(mu, I): ghat over a batch of
+    size M has cov = cov_g / M; sqrt scaling multiplies by M -> constant."""
+    rng = np.random.RandomState(m)
+    N = 4096
+    g = rng.randn(N, 3)
+    M = 16 * m
+    eta = scale_lr(1.0, M, 16, "sqrt")
+    steps = np.array([eta * g[rng.randint(0, N, M)].mean(0)
+                      for _ in range(400)])
+    var = steps.var(axis=0).mean()
+    # reference at M=16, eta=1
+    steps0 = np.array([g[rng.randint(0, N, 16)].mean(0) for _ in range(400)])
+    var0 = steps0.var(axis=0).mean()
+    assert var == pytest.approx(var0, rel=0.35)
+
+
+def test_regime_adaptation_step_budget():
+    """RA keeps the step count; no-RA keeps the epoch budget."""
+    small = Regime(base_lr=0.1, total_steps=1000, drop_every=300)
+    ra = adapt_regime(small, batch_size=4096, base_batch_size=128,
+                      regime_adaptation=True)
+    assert ra.total_steps == 1000
+    assert ra.base_lr == pytest.approx(0.1 * math.sqrt(32))
+    no_ra = adapt_regime(small, batch_size=4096, base_batch_size=128,
+                         regime_adaptation=False)
+    assert no_ra.total_steps == pytest.approx(1000 / 32, abs=1)
+
+
+def test_lr_at_decays():
+    r = Regime(base_lr=1.0, total_steps=100, drop_every=10, drop_factor=0.5)
+    assert float(r.lr_at(0)) == 1.0
+    assert float(r.lr_at(10)) == 0.5
+    assert float(r.lr_at(25)) == 0.25
+    w = Regime(base_lr=1.0, total_steps=100, drop_every=50, warmup_steps=10)
+    assert float(w.lr_at(0)) == pytest.approx(0.1)
+    assert float(w.lr_at(9)) == pytest.approx(1.0)
+
+
+def test_noise_sigma_scaling():
+    # sigma^2 ∝ M - matching the covariance of the small-batch estimate
+    assert noise_sigma(128, 128) == 0.0
+    assert noise_sigma(512, 128, base_sigma=1.0) == pytest.approx(
+        math.sqrt(3.0))
+
+
+def test_presets_are_the_table1_columns():
+    p = presets(4096, 128)
+    assert set(p) == {"SB", "LB", "LB+LR", "LB+LR+GBN", "LB+LR+GBN+RA"}
+    assert p["LB"].lr_rule == "none" and not p["LB"].use_gbn
+    assert p["LB+LR"].lr_rule == "sqrt"
+    assert p["LB+LR+GBN"].use_gbn
+    assert p["LB+LR+GBN+RA"].regime_adaptation
+
+
+def test_multiplicative_noise_unbiased_and_scaled():
+    grads = {"w": jnp.ones((2000,)), "b": 2.0 * jnp.ones((500,))}
+    sigma = 0.5
+    noisy = multiplicative_noise_grads(jax.random.PRNGKey(0), grads, sigma)
+    w = np.asarray(noisy["w"])
+    assert w.mean() == pytest.approx(1.0, abs=0.05)
+    assert w.std() == pytest.approx(sigma, rel=0.15)
+    b = np.asarray(noisy["b"])
+    assert b.std() == pytest.approx(2.0 * sigma, rel=0.2)
+
+
+def test_ghost_noise_matches_covariance():
+    """Per-section noise with var G*sigma^2 averaged over G sections gives a
+    mean with variance sigma^2 (section-granular matching). The per-section
+    z is shared across a section's elements, so the variance is measured
+    across independent draws."""
+    G = 8
+    sec = jnp.ones((G, 4))
+    sigma = 0.3
+    draws = np.array([
+        float(ghost_noise_grads(jax.random.PRNGKey(i), {"g": sec},
+                                sigma)["g"][0])
+        for i in range(400)
+    ])
+    assert draws.mean() == pytest.approx(1.0, abs=0.05)
+    assert draws.std() == pytest.approx(sigma, rel=0.2)
+
+
+def test_large_batch_config_wiring():
+    lb = LargeBatchConfig(batch_size=2048, base_batch_size=128,
+                          lr_rule="sqrt", ghost_noise=1.0)
+    assert lb.batch_ratio == 16
+    assert lb.effective_lr(0.1) == pytest.approx(0.4)
+    assert lb.effective_noise_sigma() == pytest.approx(math.sqrt(15.0))
+    small = Regime(base_lr=0.1, total_steps=100, drop_every=30)
+    r = lb.build_regime(small)
+    assert r.total_steps == 100 and r.base_lr == pytest.approx(0.4)

@@ -1,0 +1,77 @@
+"""Loop-aware HLO analysis: trip-count recovery and FLOP counting validated
+against a known program (scan of matmuls)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_scan_matmul_flops_counted_with_trips():
+    """8-step scan of a (64x64)@(64x64) matmul: 8 * 2*64^3 FLOPs."""
+    N, STEPS = 64, 8
+
+    def fn(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=STEPS)
+        return y
+
+    compiled = _compile(fn, jnp.ones((N, N)), jnp.ones((N, N)))
+    stats = H.analyze(compiled.as_text())
+    want = STEPS * 2 * N ** 3
+    assert stats.flops == pytest.approx(want, rel=0.05)
+    assert STEPS in stats.trip_counts
+
+
+def test_single_matmul_flops():
+    M, K, Nn = 32, 48, 80
+
+    def fn(a, b):
+        return a @ b
+
+    compiled = _compile(fn, jnp.ones((M, K)), jnp.ones((K, Nn)))
+    stats = H.analyze(compiled.as_text())
+    assert stats.flops == pytest.approx(2 * M * K * Nn, rel=0.01)
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("bf16[16,4096,448]{2,1,0}") == 16 * 4096 * 448 * 2
+    assert H._shape_bytes("f32[8]") == 32
+    assert H._shape_bytes("(f32[2,2]{1,0}, s32[4])") == 16 + 16
+    assert H._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_and_dominance():
+    terms = H.roofline_terms(197e12, 819e9, 0.0)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(1.0)
+    assert H.dominant_term({"compute_s": 2.0, "memory_s": 1.0,
+                            "collective_s": 0.5}) == "compute_s"
+
+
+def test_model_flops():
+    assert H.model_flops(1_000_000, 10, train=True) == 6e7
+    assert H.model_flops(1_000_000, 10, train=False) == 2e7
+
+
+def test_collectives_counted_under_mesh():
+    """psum inside shard_map on a 1-device mesh still emits an all-reduce."""
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def fn(a):
+        return shard_map(lambda t: jax.lax.psum(t, "x"), mesh=mesh,
+                         in_specs=P("x"), out_specs=P())(a)
+
+    with mesh:
+        compiled = jax.jit(fn).lower(jnp.ones((8,))).compile()
+    stats = H.analyze(compiled.as_text())
+    # single-device all-reduce may be optimised away; just assert parsing ran
+    assert stats.flops >= 0.0

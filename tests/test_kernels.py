@@ -1,0 +1,140 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+pure-jnp oracles in kernels/ref.py (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # (B, H, KV, T, S, hd)
+    (1, 2, 2, 17, 17, 32),
+    (2, 4, 2, 64, 64, 64),
+    (1, 8, 1, 128, 128, 64),     # MQA
+    (2, 4, 4, 100, 100, 128),    # MHA, ragged T
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 13),
+                                           (False, None)])
+def test_flash_attention_vs_ref(shape, dtype, causal, window):
+    B, H, KV, T, S, hd = shape
+    rng = jax.random.PRNGKey(hash((shape, causal, window or 0)) % 2**31)
+    q = jax.random.normal(rng, (B, H, T, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, KV, S, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, KV, S, hd),
+                          jnp.float32).astype(dtype)
+    out = ops.flash_attention_hm(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_model_layout():
+    """(B, T, H, hd) adapter used by the model code."""
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 32, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (2, 32, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (2, 32, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True)
+    want = ref.attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                             v.swapaxes(1, 2), causal=True).swapaxes(1, 2)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ghost batch norm kernel
+# ---------------------------------------------------------------------------
+
+GBN_SHAPES = [(1, 16, 8), (4, 300, 96), (2, 1024, 128), (3, 77, 200)]
+
+
+@pytest.mark.parametrize("shape", GBN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gbn_kernel_vs_ref(shape, dtype):
+    G, R, C = shape
+    rng = jax.random.PRNGKey(G * 1000 + R)
+    xg = (2.0 * jax.random.normal(rng, shape, jnp.float32) + 0.5).astype(dtype)
+    gamma = jnp.linspace(0.5, 1.5, C)
+    beta = jnp.linspace(-1.0, 1.0, C)
+    y, mu, var = ops.gbn_forward(xg, gamma, beta)
+    yr, mur, varr = ref.gbn_ref(xg, gamma, beta)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mur),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(varr),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=10 * tol, atol=10 * tol)
+
+
+def test_gbn_kernel_inside_module():
+    """core.gbn_apply(use_kernels=True) matches the jnp path."""
+    from repro.core.gbn import gbn_apply, gbn_init
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 24)) * 2 + 1
+    params, state = gbn_init(24)
+    y0, s0 = gbn_apply(params, state, x, ghost_batch_size=16)
+    y1, s1 = gbn_apply(params, state, x, ghost_batch_size=16,
+                       use_kernels=True)
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s0["mu_run"], s1["mu_run"], rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba chunk scan kernel
+# ---------------------------------------------------------------------------
+
+MAMBA_SHAPES = [
+    # (B, c, di, ds)
+    (1, 8, 128, 8),
+    (2, 16, 256, 16),
+    (2, 32, 512, 16),
+]
+
+
+@pytest.mark.parametrize("shape", MAMBA_SHAPES)
+def test_mamba_chunk_vs_ref(shape):
+    B, c, di, ds = shape
+    rng = jax.random.PRNGKey(sum(shape))
+    xc = jax.random.normal(rng, (B, c, di))
+    dt = 0.1 * jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(rng, 1), (B, c, di)))
+    Bm = jax.random.normal(jax.random.fold_in(rng, 2), (B, c, ds))
+    Cm = jax.random.normal(jax.random.fold_in(rng, 3), (B, c, ds))
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(rng, 4), (di, ds)))
+    h0 = jax.random.normal(jax.random.fold_in(rng, 5), (B, di, ds))
+    y, h = ops.mamba_chunk(xc, dt, Bm, Cm, A, h0)
+    yr, hr = ref.mamba_chunk_ref(xc, dt, Bm, Cm, A, h0)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h, hr, rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_chunk_chains_across_chunks():
+    """Carrying h across two chunks == one long reference scan."""
+    B, c, di, ds = 1, 8, 128, 8
+    rng = jax.random.PRNGKey(9)
+    xc = jax.random.normal(rng, (B, 2 * c, di))
+    dt = 0.1 * jnp.ones((B, 2 * c, di))
+    Bm = jax.random.normal(jax.random.fold_in(rng, 1), (B, 2 * c, ds))
+    Cm = jax.random.normal(jax.random.fold_in(rng, 2), (B, 2 * c, ds))
+    A = -jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (di, ds)))
+    h0 = jnp.zeros((B, di, ds))
+    y1, h1 = ops.mamba_chunk(xc[:, :c], dt[:, :c], Bm[:, :c], Cm[:, :c], A, h0)
+    y2, h2 = ops.mamba_chunk(xc[:, c:], dt[:, c:], Bm[:, c:], Cm[:, c:], A, h1)
+    yr, hr = ref.mamba_chunk_ref(xc, dt, Bm, Cm, A, h0)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], axis=1), yr,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h2, hr, rtol=1e-4, atol=1e-4)
