@@ -66,6 +66,29 @@ def kernel_gbn(quick: bool) -> None:
     emit("kernel_gbn_pallas_interp", t_ker, f"max_err={err:.1e}")
 
 
+def kernel_gbn_grad(quick: bool) -> None:
+    """Fused GBN forward+backward (the custom_vjp Pallas pair) vs autodiff
+    of the jnp oracle — the hot loop of large-batch training."""
+    from repro.kernels import ops, ref
+    G, R, C = (4, 512, 128) if quick else (8, 2048, 256)
+    x = jax.random.normal(jax.random.PRNGKey(0), (G, R, C))
+    gamma = jnp.linspace(0.5, 1.5, C)
+    beta = jnp.zeros((C,))
+
+    def make_loss(f):
+        return lambda a, g, b: (f(a, g, b)[0] ** 2).mean()
+
+    g_ref = jax.jit(jax.grad(make_loss(ref.gbn_ref), argnums=(0, 1, 2)))
+    g_ker = jax.jit(jax.grad(make_loss(
+        lambda a, g, b: ops.gbn_forward(a, g, b)), argnums=(0, 1, 2)))
+    t_ref = _timeit(lambda: g_ref(x, gamma, beta)[0], reps=3)
+    t_ker = _timeit(lambda: g_ker(x, gamma, beta)[0], reps=3)
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(g_ker(x, gamma, beta), g_ref(x, gamma, beta)))
+    emit("kernel_gbn_grad_ref", t_ref, f"shape={G}x{R}x{C}")
+    emit("kernel_gbn_grad_pallas_interp", t_ker, f"max_err={err:.1e}")
+
+
 def kernel_flash_attention(quick: bool) -> None:
     from repro.kernels import ops, ref
     B, H, KV, S, hd = (1, 4, 2, 256, 64) if quick else (2, 8, 4, 1024, 64)
@@ -285,6 +308,7 @@ def roofline_from_dryrun(quick: bool) -> None:
 
 BENCHES: Dict[str, Callable] = {
     "kernel_gbn": kernel_gbn,
+    "kernel_gbn_grad": kernel_gbn_grad,
     "kernel_flash_attention": kernel_flash_attention,
     "kernel_mamba": kernel_mamba,
     "table1_generalization_gap": table1_generalization_gap,

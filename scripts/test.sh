@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 gate (the exact command from ROADMAP.md), with an explicit
+# collection pass first so import regressions (like the jax shard_map move)
+# fail loudly on their own, before any test runs.
+#
+# Usage:
+#   scripts/test.sh              # full tier-1 suite
+#   scripts/test.sh -m tier1     # just the tier1-marked core subset
+#   scripts/test.sh tests/test_kernels.py -k gbn   # any pytest args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collect =="
+python -m pytest --collect-only -q >/dev/null
+
+echo "== run =="
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,29 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` (jax 0.4.x) to a
+top-level ``jax.shard_map`` export, and its replication-check kwarg was
+renamed ``check_rep`` -> ``check_vma`` along the way. Importing through this
+module keeps every call site working on either side of the move — callers
+pass whichever kwarg name they like and it is translated to what the
+installed jax accepts.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:                                   # jax >= 0.6: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:                    # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """`shard_map(f, mesh=..., in_specs=..., out_specs=..., ...)` with the
+    `check_vma` / `check_rep` kwarg translated for the installed jax."""
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)

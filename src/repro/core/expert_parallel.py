@@ -30,8 +30,9 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.configs.base import MoEConfig
 

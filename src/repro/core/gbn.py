@@ -22,6 +22,10 @@ over N,H,W per channel). The batch axis must be divisible by the ghost size
 
 The compute-heavy normalization is also available as a Pallas TPU kernel
 (`repro.kernels.gbn` / `ops.gbn_forward`), validated against this reference.
+The kernel path is fully differentiable (dedicated Pallas backward via
+``jax.custom_vjp``), so ``use_kernels=True`` is safe under ``jax.grad`` —
+including the leftover-rows tail below, which back-propagates through the
+kernel's mu/var outputs.
 """
 from __future__ import annotations
 

@@ -10,6 +10,28 @@ rows (ghost_batch * H * W for convs) one ghost batch folds in.
 
 Public entry point: :func:`repro.kernels.ops.gbn_forward` (jit'd, falls back
 to interpret mode off-TPU). Oracle: :func:`repro.kernels.ref.gbn_ref`.
+
+Kernel gradients
+----------------
+``gbn_forward`` is fully differentiable: :mod:`repro.kernels.ops` wires
+:func:`gbn_backward_pallas` up as the ``jax.custom_vjp`` rule, so
+``jax.grad`` through the ``use_kernels=True`` training path never falls back
+to autodiff-through-interpret. The backward mirrors the forward's structure:
+
+1. a tiled reduction over the same (ghost, col-tile, row-tile) grid
+   accumulating the two per-(ghost, channel) sums the BN backward needs,
+   ``sum_r dy`` and ``sum_r dy * xhat`` (``xhat`` recomputed in-kernel from
+   the saved mu/var — nothing bigger than the activations is stashed);
+2. tiny (G, C)-shaped host math folding those sums (plus any upstream
+   cotangents on the mu/var outputs — the leftover-rows path in
+   :mod:`repro.core.gbn` genuinely propagates these) into three
+   per-(ghost, channel) coefficients;
+3. an elementwise pass over the same grid computing
+   ``dx = dy*c1 + (x - mu)*c2 + c3``.
+
+``dgamma``/``dbeta`` are the per-ghost sums reduced over ghosts. Oracle:
+:func:`repro.kernels.ref.gbn_vjp_ref` (hand-derived pure jnp), cross-checked
+against ``jax.vjp`` of :func:`repro.kernels.ref.gbn_ref` in the tests.
 """
 from __future__ import annotations
 
@@ -55,6 +77,35 @@ def _normalize_kernel(x_ref, mu_ref, var_ref, gamma_ref, beta_ref, y_ref, *,
     b = beta_ref[...].astype(jnp.float32)
     y = (x - mu) * jax.lax.rsqrt(var + eps) * g + b
     y_ref[0] = y.astype(y_ref.dtype)
+
+
+def _bwd_stats_kernel(x_ref, dy_ref, mu_ref, rstd_ref, sdy_ref, sdyxh_ref):
+    """Accumulate sum_r dy and sum_r dy*xhat per (ghost, col-tile).
+
+    Same grid as the forward reduction; row-padding needs no mask because the
+    padded dy rows are zero and multiply every term.
+    """
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        sdy_ref[...] = jnp.zeros_like(sdy_ref)
+        sdyxh_ref[...] = jnp.zeros_like(sdyxh_ref)
+
+    x = x_ref[0].astype(jnp.float32)                  # (row_tile, col_tile)
+    dy = dy_ref[0].astype(jnp.float32)
+    xhat = (x - mu_ref[...]) * rstd_ref[...]
+    sdy_ref[...] += jnp.sum(dy, axis=0, keepdims=True)
+    sdyxh_ref[...] += jnp.sum(dy * xhat, axis=0, keepdims=True)
+
+
+def _bwd_dx_kernel(x_ref, dy_ref, mu_ref, c1_ref, c2_ref, c3_ref, dx_ref):
+    """Elementwise dx = dy*c1 + (x - mu)*c2 + c3 with per-(ghost, channel)
+    coefficients (c1 = gamma*rstd, c2 = 2*gvar/R, c3 = gmu/R)."""
+    x = x_ref[0].astype(jnp.float32)
+    dy = dy_ref[0].astype(jnp.float32)
+    dx = dy * c1_ref[...] + (x - mu_ref[...]) * c2_ref[...] + c3_ref[...]
+    dx_ref[0] = dx.astype(dx_ref.dtype)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -111,3 +162,71 @@ def gbn_forward_pallas(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
         interpret=interpret,
     )(xp, mu, var, gp, bp)
     return y[:, :R, :C], mu[:, :C], var[:, :C]
+
+
+def gbn_backward_pallas(xg: jax.Array, gamma: jax.Array, mu: jax.Array,
+                        var: jax.Array, dy: jax.Array, dmu: jax.Array,
+                        dvar: jax.Array, *, eps: float = 1e-5,
+                        row_tile: int = DEFAULT_ROW_TILE,
+                        col_tile: int = DEFAULT_COL_TILE,
+                        interpret: bool = False
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """VJP of :func:`gbn_forward_pallas` w.r.t. (xg, gamma, beta).
+
+    xg, dy: (G, R, C); mu, var, dmu, dvar: (G, C) — the saved forward
+    statistics and the cotangents of all three forward outputs.
+    Returns (dx (G, R, C) in xg.dtype, dgamma (C,), dbeta (C,)) — the
+    parameter grads in float32.
+    """
+    G, R, C = xg.shape
+    xp = _pad_to(_pad_to(xg, 2, col_tile), 1, row_tile)
+    dyp = _pad_to(_pad_to(dy, 2, col_tile), 1, row_tile)
+    Rp, Cp = xp.shape[1], xp.shape[2]
+    nr, nc = Rp // row_tile, Cp // col_tile
+
+    mup = _pad_to(mu.astype(jnp.float32), 1, col_tile)          # (G, Cp)
+    rstd = _pad_to(jax.lax.rsqrt(var.astype(jnp.float32) + eps), 1, col_tile)
+    stat_spec = pl.BlockSpec((1, col_tile), lambda g, c, r: (g, c))
+
+    sdy, sdyxh = pl.pallas_call(
+        _bwd_stats_kernel,
+        grid=(G, nc, nr),
+        in_specs=[pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c)),
+                  pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c)),
+                  stat_spec, stat_spec],
+        out_specs=[stat_spec, stat_spec],
+        out_shape=[jax.ShapeDtypeStruct((G, Cp), jnp.float32),
+                   jax.ShapeDtypeStruct((G, Cp), jnp.float32)],
+        interpret=interpret,
+    )(xp, dyp, mup, rstd)
+
+    # (G, C)-sized glue: fold the tile sums and the upstream mu/var
+    # cotangents into per-(ghost, channel) dx coefficients. With
+    # mu = mean(x) the explicit dvar/dmu cross term vanishes identically.
+    g32 = _pad_to(gamma.astype(jnp.float32).reshape(1, -1), 1, col_tile)
+    gvar = _pad_to(dvar.astype(jnp.float32), 1, col_tile) \
+        - 0.5 * g32 * rstd * rstd * sdyxh
+    gmu = _pad_to(dmu.astype(jnp.float32), 1, col_tile) - g32 * rstd * sdy
+    c1 = g32 * rstd
+    c2 = 2.0 * gvar / R
+    c3 = gmu / R
+
+    dx = pl.pallas_call(
+        _bwd_dx_kernel,
+        grid=(G, nc, nr),
+        in_specs=[pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c)),
+                  pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c)),
+                  stat_spec, stat_spec, stat_spec, stat_spec],
+        out_specs=pl.BlockSpec((1, row_tile, col_tile),
+                               lambda g, c, r: (g, r, c)),
+        out_shape=jax.ShapeDtypeStruct((G, Rp, Cp), xg.dtype),
+        interpret=interpret,
+    )(xp, dyp, mup, c1, c2, c3)
+
+    dgamma = jnp.sum(sdyxh, axis=0)[:C]
+    dbeta = jnp.sum(sdy, axis=0)[:C]
+    return dx[:, :R, :C], dgamma, dbeta

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gbn import gbn_forward_pallas
+from repro.kernels.gbn import gbn_backward_pallas, gbn_forward_pallas
 from repro.kernels.mamba_scan import mamba_chunk_pallas
 
 
@@ -55,11 +55,40 @@ def flash_attention_hm(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 
-def gbn_forward(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
-                eps: float = 1e-5) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """xg: (G, R, C) -> (y, mu (G,C), var (G,C))."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _gbn_forward(xg: jax.Array, gamma: jax.Array, beta: jax.Array,
+                 eps: float) -> Tuple[jax.Array, jax.Array, jax.Array]:
     return gbn_forward_pallas(xg, gamma, beta, eps=eps,
                               interpret=_interpret())
+
+
+def _gbn_fwd(xg, gamma, beta, eps):
+    y, mu, var = _gbn_forward(xg, gamma, beta, eps)
+    # residuals are the input + the already-reduced stats — nothing
+    # activation-sized is saved beyond x itself
+    return (y, mu, var), (xg, gamma, beta, mu, var)
+
+
+def _gbn_bwd(eps, res, cts):
+    xg, gamma, beta, mu, var = res
+    dy, dmu, dvar = cts
+    dx, dgamma, dbeta = gbn_backward_pallas(
+        xg, gamma, mu, var, dy, dmu, dvar, eps=eps, interpret=_interpret())
+    return dx, dgamma.astype(gamma.dtype), dbeta.astype(beta.dtype)
+
+
+_gbn_forward.defvjp(_gbn_fwd, _gbn_bwd)
+
+
+def gbn_forward(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+                eps: float = 1e-5) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """xg: (G, R, C) -> (y, mu (G,C), var (G,C)).
+
+    Differentiable: the backward is the dedicated Pallas kernel
+    (:func:`repro.kernels.gbn.gbn_backward_pallas`) via ``jax.custom_vjp``,
+    validated against :func:`repro.kernels.ref.gbn_vjp_ref`.
+    """
+    return _gbn_forward(xg, gamma, beta, eps)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,49 @@ def gbn_ref(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
     return y.astype(xg.dtype), mu, var
 
 
+def gbn_vjp_ref(xg: jax.Array, gamma: jax.Array, beta: jax.Array,
+                cts: Tuple[jax.Array, jax.Array, jax.Array], *,
+                eps: float = 1e-5
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Hand-derived pure-jnp VJP of :func:`gbn_ref`.
+
+    ``cts = (dy, dmu, dvar)`` are the cotangents of the three forward
+    outputs (the mu/var cotangents are live: the leftover-rows path in
+    ``core.gbn`` normalizes its tail with the last ghost's statistics, so
+    the loss really does depend on them). Returns (dx, dgamma, dbeta).
+
+    Standard BN backward, per ghost, with the upstream stat cotangents
+    folded in (``gvar``/``gmu`` are the TOTAL adjoints of var/mu):
+
+        gvar = dvar - 1/2 gamma rstd^2 sum_r dy xhat
+        gmu  = dmu  - gamma rstd sum_r dy
+        dx_r = gamma rstd dy_r + 2 gvar (x_r - mu)/R + gmu/R
+    """
+    dy, dmu, dvar = cts
+    xf = xg.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    g = gamma.astype(jnp.float32)
+    R = xg.shape[1]
+
+    mu = xf.mean(axis=1)                                         # (G, C)
+    var = jnp.mean(jnp.square(xf - mu[:, None, :]), axis=1)
+    rstd = jax.lax.rsqrt(var + eps)
+    xhat = (xf - mu[:, None, :]) * rstd[:, None, :]
+
+    sdy = dyf.sum(axis=1)                                        # (G, C)
+    sdyxh = jnp.sum(dyf * xhat, axis=1)
+    gvar = dvar.astype(jnp.float32) - 0.5 * g * rstd * rstd * sdyxh
+    gmu = dmu.astype(jnp.float32) - g * rstd * sdy
+
+    dx = dyf * (g * rstd)[:, None, :] \
+        + (xf - mu[:, None, :]) * (2.0 * gvar / R)[:, None, :] \
+        + (gmu / R)[:, None, :]
+    dgamma = sdyxh.sum(axis=0)
+    dbeta = sdy.sum(axis=0)
+    return (dx.astype(xg.dtype), dgamma.astype(gamma.dtype),
+            dbeta.astype(beta.dtype))
+
+
 # ---------------------------------------------------------------------------
 # mamba chunk-scan oracle
 # ---------------------------------------------------------------------------

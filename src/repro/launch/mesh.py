@@ -24,6 +24,14 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_data_mesh(n_devices: int = 0):
+    """1-D ("data",) mesh over all (or the first ``n_devices``) local
+    devices — one mesh slot per GBN device shard; used by the shard_map
+    data-parallel trainer (:mod:`repro.train.data_parallel`)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 def dp_axes(mesh) -> Tuple[str, ...]:
     """The axes the global batch is sharded over."""
     return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

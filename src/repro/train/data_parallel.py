@@ -1,0 +1,139 @@
+"""Sharded data-parallel training: the paper's ghost batches made literal
+on hardware.
+
+Hoffer et al. compute normalization statistics over small "ghost" slices of
+the large batch — and note this is exactly what a data-parallel cluster does
+for free, since each device only ever sees its own shard. This module maps
+that observation onto a 1-D ``("data",)`` mesh with ``shard_map``:
+
+- the batch is sharded over the mesh; parameters, BN running state, and the
+  optimizer state are replicated;
+- every device evaluates the SAME vision loss as the single-device trainer
+  (:func:`repro.train.trainer.make_vision_loss_fn`) on its local shard, so
+  the ghost-batch statistics that NORMALIZE activations are per-device by
+  construction and never cross the wire;
+- cross-device traffic per step is one gradient ``pmean`` plus two cheap
+  (C,)-sized ones — the running-EMA state (averaged so the replicated
+  inference statistics stay identical everywhere) and the scalar metrics —
+  after which the replicated SGD update keeps every device's parameters
+  bit-identical.
+
+Because a local shard of ``B/ndev`` rows split into ghost batches of
+``|B_S|`` rows partitions the global batch exactly like the single-device
+GBN step does, the data-parallel step's loss and gradients MATCH the
+single-device step (same ghost boundaries, mean-of-means over equal shards)
+— only the running-statistics EMA differs, since each device folds its own
+ghosts sequentially before the cross-device average (tested in
+``tests/test_data_parallel.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.paper_models import VisionModelConfig
+from repro.core.compat import shard_map
+from repro.core.large_batch import LargeBatchConfig
+from repro.core.regime import Regime
+from repro.optim import sgd
+from repro.train.trainer import make_vision_loss_fn
+
+Params = Any
+
+
+def _pmean_state(state: Params, axis: str) -> Params:
+    """Average the BN running stats across devices so the replicated state
+    stays identical everywhere; boolean flags ('initialized') are already
+    replicated and cannot be pmean'd."""
+    return jax.tree.map(
+        lambda s: s if s.dtype == jnp.bool_ else jax.lax.pmean(s, axis),
+        state)
+
+
+def make_dp_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
+                              lb: LargeBatchConfig, regime: Regime, mesh, *,
+                              weight_decay: float = 5e-4,
+                              use_kernels: bool = False,
+                              axis: str = "data") -> Callable:
+    """shard_map twin of :func:`repro.train.trainer.make_vision_train_step`.
+
+    Same signature as the single-device step —
+    (params, bn_state, opt_state, x, y, step, rng) ->
+    (params, bn_state, opt_state, metrics) — with x, y sharded over ``axis``
+    and everything else replicated. Ghost statistics stay per-device; the
+    collectives are the gradient pmean plus the small EMA/metric averages.
+    """
+    sigma = lb.effective_noise_sigma()
+    loss_fn = make_vision_loss_fn(model_apply, cfg, lb,
+                                  use_kernels=use_kernels)
+
+    def local_step(params: Params, bn_state: Params,
+                   opt_state: sgd.SGDState, x: jax.Array, y: jax.Array,
+                   step: jax.Array, rng: jax.Array):
+        # local shard, local ghost statistics — Alg. 1 on this device only
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, bn_state, x, y)
+        # grads (+ EMA state and scalar metrics) cross devices; the
+        # normalization statistics never do
+        grads = jax.lax.pmean(grads, axis)
+        loss = jax.lax.pmean(loss, axis)
+        acc = jax.lax.pmean(acc, axis)
+        new_state = _pmean_state(new_state, axis)
+        lr = regime.lr_at(step)
+        params2, opt_state2, m = sgd.update(
+            grads, opt_state, params, lr=lr, momentum=lb.momentum,
+            weight_decay=weight_decay, grad_clip=lb.grad_clip,
+            noise_sigma=sigma, rng=rng)
+        return params2, new_state, opt_state2, {
+            "loss": loss, "acc": acc, "lr": lr, **m}
+
+    rep = P()
+    data = P(axis)
+    return shard_map(local_step, mesh=mesh,
+                     in_specs=(rep, rep, rep, data, data, rep, rep),
+                     out_specs=(rep, rep, rep, rep),
+                     check_vma=False)
+
+
+def dp_gbn_forward(x: jax.Array, gamma: jax.Array, beta: jax.Array, mesh, *,
+                   ghost_batch_size: int, eps: float = 1e-5,
+                   use_kernels: bool = False, axis: str = "data"
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Data-parallel GBN forward exposing the per-device ghost statistics.
+
+    x: (B, ..., C) sharded over ``axis``; gamma/beta: (C,) replicated.
+    Returns (y (B, ..., C) sharded, mu, var) where mu/var have shape
+    (ndev * G_local, C), stacked device-major — literally one row of
+    statistics per ghost batch per device, none of them synchronized.
+    """
+    C = x.shape[-1]
+    ndev = mesh.shape[axis]
+    if x.shape[0] % ndev:
+        raise ValueError(f"batch {x.shape[0]} not divisible by {ndev} devices")
+    if (x.shape[0] // ndev) % ghost_batch_size:
+        raise ValueError(
+            f"local batch {x.shape[0] // ndev} not divisible by "
+            f"ghost_batch_size={ghost_batch_size}")
+    dt = x.dtype
+
+    def local(xb, g, b):
+        G = xb.shape[0] // ghost_batch_size
+        # fold spatial/feature dims into the row axis per ghost (NHWC convs
+        # reduce over N, H, W per channel), matching core.gbn.gbn_apply
+        xg = xb.astype(jnp.float32).reshape(G, -1, C)
+        if use_kernels:
+            from repro.kernels import ops as kops
+            y, mu, var = kops.gbn_forward(xg, g, b, eps=eps)
+        else:
+            from repro.kernels import ref
+            y, mu, var = ref.gbn_ref(xg, g, b, eps=eps)
+        return y.reshape(xb.shape).astype(dt), mu, var
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axis), P(), P()),
+                   out_specs=(P(axis), P(axis), P(axis)),
+                   check_vma=False)
+    return fn(x, gamma.astype(jnp.float32), beta.astype(jnp.float32))

@@ -79,6 +79,32 @@ def make_lm_eval_step(cfg: ModelConfig, use_kernels: bool = False) -> Callable:
 # ---------------------------------------------------------------------------
 
 
+def make_vision_loss_fn(model_apply: Callable, cfg: VisionModelConfig,
+                        lb: LargeBatchConfig, *,
+                        use_kernels: bool = False) -> Callable:
+    """(params, bn_state, x, y) -> (nll, (new_bn_state, acc)).
+
+    Shared by the single-device step below and the shard_map data-parallel
+    step (:mod:`repro.train.data_parallel`) — in the sharded case it runs on
+    each device's LOCAL batch, so the ghost-batch statistics inside
+    ``model_apply`` are per-device by construction. Fully differentiable
+    through the ``use_kernels=True`` GBN path (Pallas backward kernel via
+    ``jax.custom_vjp``).
+    """
+
+    def loss_fn(p: Params, bn_state: Params, x: jax.Array, y: jax.Array):
+        logits, new_state = model_apply(
+            p, bn_state, cfg, x, training=True,
+            ghost_batch_size=lb.ghost_batch_size,
+            use_gbn=lb.use_gbn, use_kernels=use_kernels)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+        acc = (logits.argmax(-1) == y).mean()
+        return nll, (new_state, acc)
+
+    return loss_fn
+
+
 def make_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
                            lb: LargeBatchConfig, regime: Regime,
                            *, weight_decay: float = 5e-4,
@@ -89,22 +115,14 @@ def make_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
     ``lb.ghost_batch_size`` is Alg. 1's |B_S|.
     """
     sigma = lb.effective_noise_sigma()
+    loss_fn = make_vision_loss_fn(model_apply, cfg, lb,
+                                  use_kernels=use_kernels)
 
     def train_step(params: Params, bn_state: Params, opt_state: sgd.SGDState,
                    x: jax.Array, y: jax.Array, step: jax.Array,
                    rng: jax.Array):
-        def loss_fn(p):
-            logits, new_state = model_apply(
-                p, bn_state, cfg, x, training=True,
-                ghost_batch_size=lb.ghost_batch_size,
-                use_gbn=lb.use_gbn, use_kernels=use_kernels)
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-            nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
-            acc = (logits.argmax(-1) == y).mean()
-            return nll, (new_state, acc)
-
         (loss, (new_state, acc)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
+            loss_fn, has_aux=True)(params, bn_state, x, y)
         lr = regime.lr_at(step)
         params2, opt_state2, m = sgd.update(
             grads, opt_state, params, lr=lr, momentum=lb.momentum,
@@ -137,16 +155,28 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
                  lb: LargeBatchConfig, regime: Regime, *, seed: int = 0,
                  eval_every: int = 0, track_diffusion: bool = True,
                  log_fn: Optional[Callable[[str], None]] = None,
-                 use_kernels: bool = False,
+                 use_kernels: bool = False, mesh=None,
                  weight_decay: float = 5e-4) -> Dict[str, Any]:
-    """Full training run; returns final/best accuracy + diffusion trace."""
+    """Full training run; returns final/best accuracy + diffusion trace.
+
+    With ``mesh`` (a 1-D ``("data",)`` mesh from
+    :func:`repro.launch.mesh.make_data_mesh`) the step runs sharded
+    data-parallel: each device normalizes with its own ghost-batch
+    statistics and only gradients cross devices.
+    """
     init_fn, apply_fn = model_fns
     rng = jax.random.PRNGKey(seed)
     params, bn_state = init_fn(rng, cfg)
     opt_state = sgd.init(params)
-    step_fn = jax.jit(make_vision_train_step(
-        apply_fn, cfg, lb, regime, use_kernels=use_kernels,
-        weight_decay=weight_decay))
+    if mesh is not None:
+        from repro.train.data_parallel import make_dp_vision_train_step
+        step_fn = jax.jit(make_dp_vision_train_step(
+            apply_fn, cfg, lb, regime, mesh, use_kernels=use_kernels,
+            weight_decay=weight_decay))
+    else:
+        step_fn = jax.jit(make_vision_train_step(
+            apply_fn, cfg, lb, regime, use_kernels=use_kernels,
+            weight_decay=weight_decay))
     evaluate = make_vision_eval(apply_fn, cfg)
     tracker = DiffusionTracker(params) if track_diffusion else None
 

@@ -3,10 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gbn import (_cascaded_ema, equal_weight_bn_apply, gbn_apply,
                             gbn_init)
+
+pytestmark = pytest.mark.tier1
 
 
 def test_ghost_stats_match_small_batch_bn():
@@ -43,6 +45,44 @@ def test_cascaded_ema_equals_sequential():
         seq = (1 - eta) * seq + eta * g
     closed = _cascaded_ema(run, ghosts, eta)
     np.testing.assert_allclose(closed, seq, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(G=st.integers(1, 6), c=st.integers(1, 5), eta=st.floats(0.05, 0.5))
+def test_cascaded_ema_equals_sequential_random(G, c, eta):
+    """Closed form == explicit sequential fold for random stats/eta/G."""
+    rng = jax.random.PRNGKey(G * 31 + c)
+    run = jax.random.normal(rng, (c,)) * 3.0
+    ghosts = jax.random.normal(jax.random.fold_in(rng, 1), (G, c)) * 2.0
+    seq = run
+    for g in ghosts:
+        seq = (1 - eta) * seq + eta * g
+    closed = _cascaded_ema(run, ghosts, eta)
+    np.testing.assert_allclose(closed, seq, rtol=1e-5, atol=1e-6)
+
+
+def test_first_batch_initializes_running_stats():
+    """The very first training batch seeds the EMA with the batch moments
+    (mean over ghosts, unbiased var) instead of decaying the zero/one init."""
+    rng = jax.random.PRNGKey(7)
+    x = jax.random.normal(rng, (64, 4)) * 2.0 + 3.0
+    params, state = gbn_init(4)
+    assert not bool(state["initialized"])
+    _, s1 = gbn_apply(params, state, x, ghost_batch_size=16)
+    assert bool(s1["initialized"])
+    xg = np.asarray(x, np.float32).reshape(4, 16, 4)
+    mu = xg.mean(axis=1)                              # (G, C)
+    var_u = xg.var(axis=1) * (16 / 15)                # unbiased per ghost
+    np.testing.assert_allclose(s1["mu_run"], mu.mean(0), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(s1["var_run"], var_u.mean(0), rtol=1e-5,
+                               atol=1e-5)
+    # the SECOND batch takes the cascaded-EMA branch
+    x2 = jax.random.normal(jax.random.fold_in(rng, 1), (64, 4))
+    _, s2 = gbn_apply(params, s1, x2, ghost_batch_size=16, momentum=0.1)
+    xg2 = np.asarray(x2, np.float32).reshape(4, 16, 4)
+    want = _cascaded_ema(s1["mu_run"], jnp.asarray(xg2.mean(axis=1)), 0.1)
+    np.testing.assert_allclose(s2["mu_run"], want, rtol=1e-5, atol=1e-5)
 
 
 def test_inference_uses_running_stats():

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.large_batch import LargeBatchConfig, presets
 from repro.core.lr_scaling import noise_sigma, scale_lr

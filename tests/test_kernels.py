@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.tier1
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
@@ -91,6 +93,138 @@ def test_gbn_kernel_inside_module():
     np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(s0["mu_run"], s1["mu_run"], rtol=1e-4,
                                atol=1e-4)
+
+
+def test_gbn_kernel_leftover_rows():
+    """B not divisible by the ghost size: the tail is normalized with the
+    last ghost's stats; kernel and jnp paths must agree (fwd AND grad)."""
+    from repro.core.gbn import gbn_apply, gbn_init
+    x = jax.random.normal(jax.random.PRNGKey(3), (70, 24)) * 2 + 1
+    params, state = gbn_init(24)
+    y0, s0 = gbn_apply(params, state, x, ghost_batch_size=16)
+    y1, s1 = gbn_apply(params, state, x, ghost_batch_size=16,
+                       use_kernels=True)
+    np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s0["mu_run"], s1["mu_run"], rtol=1e-4,
+                               atol=1e-4)
+    # the tail path makes the mu/var outputs of the kernel gradient-carrying
+    w = jax.random.normal(jax.random.PRNGKey(4), (70, 24))
+
+    def loss(p, uk):
+        y, _ = gbn_apply(p, state, x, ghost_batch_size=16, use_kernels=uk)
+        return (y * w).sum()
+
+    g0 = jax.grad(lambda p: loss(p, False))(params)
+    g1 = jax.grad(lambda p: loss(p, True))(params)
+    for k in g0:
+        np.testing.assert_allclose(g0[k], g1[k], rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ghost batch norm kernel — gradients (Pallas backward via custom_vjp)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", GBN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gbn_grad_vs_ref(shape, dtype):
+    """jax.grad through the kernel custom_vjp == jax.grad through the
+    oracle, with live cotangents on ALL THREE outputs (y, mu, var)."""
+    G, R, C = shape
+    rng = jax.random.PRNGKey(G * 777 + R)
+    xg = (2.0 * jax.random.normal(rng, shape, jnp.float32) + 0.5).astype(dtype)
+    gamma = jnp.linspace(0.5, 1.5, C)
+    beta = jnp.linspace(-1.0, 1.0, C)
+    wy = jax.random.normal(jax.random.fold_in(rng, 1), shape)
+    wm = jax.random.normal(jax.random.fold_in(rng, 2), (G, C))
+    wv = jax.random.normal(jax.random.fold_in(rng, 3), (G, C))
+
+    def make_loss(f):
+        def loss(x, g, b):
+            y, mu, var = f(x, g, b)
+            return ((y.astype(jnp.float32) * wy).sum()
+                    + (mu * wm).sum() + (var * wv).sum())
+        return loss
+
+    gk = jax.grad(make_loss(ops.gbn_forward), argnums=(0, 1, 2))(
+        xg, gamma, beta)
+    gr = jax.grad(make_loss(ref.gbn_ref), argnums=(0, 1, 2))(xg, gamma, beta)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", GBN_SHAPES)
+def test_gbn_backward_kernel_vs_hand_vjp(shape):
+    """gbn_backward_pallas directly against the hand-derived oracle VJP."""
+    from repro.kernels.gbn import gbn_backward_pallas
+    G, R, C = shape
+    rng = jax.random.PRNGKey(G + R + C)
+    xg = 2.0 * jax.random.normal(rng, shape) + 0.5
+    gamma = jnp.linspace(0.5, 1.5, C)
+    beta = jnp.zeros((C,))
+    dy = jax.random.normal(jax.random.fold_in(rng, 1), shape)
+    dmu = jax.random.normal(jax.random.fold_in(rng, 2), (G, C))
+    dvar = jax.random.normal(jax.random.fold_in(rng, 3), (G, C))
+    _, mu, var = ref.gbn_ref(xg, gamma, beta)
+    dx, dgamma, dbeta = gbn_backward_pallas(xg, gamma, mu, var, dy, dmu,
+                                            dvar, interpret=True)
+    dxr, dgr, dbr = ref.gbn_vjp_ref(xg, gamma, beta, (dy, dmu, dvar))
+    np.testing.assert_allclose(dx, dxr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dgamma, dgr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dbeta, dbr, rtol=1e-4, atol=1e-4)
+
+
+def test_gbn_vjp_ref_matches_autodiff():
+    """The hand-derived oracle VJP == jax.vjp of the jnp oracle."""
+    G, R, C = 3, 50, 17
+    rng = jax.random.PRNGKey(5)
+    xg = jax.random.normal(rng, (G, R, C)) * 3 - 1
+    gamma = jnp.linspace(0.2, 2.0, C)
+    beta = jnp.linspace(-0.5, 0.5, C)
+    cts = (jax.random.normal(jax.random.fold_in(rng, 1), (G, R, C)),
+           jax.random.normal(jax.random.fold_in(rng, 2), (G, C)),
+           jax.random.normal(jax.random.fold_in(rng, 3), (G, C)))
+    _, vjp = jax.vjp(lambda *a: ref.gbn_ref(*a), xg, gamma, beta)
+    want = vjp(cts)
+    got = ref.gbn_vjp_ref(xg, gamma, beta, cts)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_vision_train_step_kernel_path_matches():
+    """A full make_vision_train_step(use_kernels=True) step runs under grad
+    and matches the non-kernel step's loss and updated params."""
+    import dataclasses
+    from repro.configs.paper_models import F1_MNIST
+    from repro.core import LargeBatchConfig, Regime
+    from repro.models.cnn import model_fns
+    from repro.optim import sgd
+    from repro.train.trainer import make_vision_train_step
+    cfg = dataclasses.replace(F1_MNIST, input_shape=(8, 8, 1),
+                              hidden_sizes=(32,), ghost_batch_size=16)
+    lb = LargeBatchConfig(batch_size=64, base_batch_size=64,
+                          ghost_batch_size=16)
+    regime = Regime(base_lr=0.1, total_steps=10, drop_every=10)
+    init_fn, apply_fn = model_fns(cfg)
+    params, bn = init_fn(jax.random.PRNGKey(0), cfg)
+    opt = sgd.init(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 8, 8, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, 10)
+    outs = {}
+    for uk in (False, True):
+        step = jax.jit(make_vision_train_step(apply_fn, cfg, lb, regime,
+                                              use_kernels=uk))
+        outs[uk] = step(params, bn, opt, x, y, jnp.int32(0),
+                        jax.random.PRNGKey(3))
+    p0, _, _, m0 = outs[False]
+    p1, _, _, m1 = outs[True]
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,8 @@ from repro.data.synthetic import teacher_classification
 from repro.models.cnn import model_fns
 from repro.train.trainer import train_vision
 
+pytestmark = pytest.mark.tier1
+
 
 def _small(cfg, **kw):
     return dataclasses.replace(cfg, input_shape=(8, 8, 1), **kw)
