@@ -286,6 +286,45 @@ def serve_decode_step(quick: bool) -> None:
          f"tok_per_s={B / (us / 1e6):.0f};cache={S}")
 
 
+def sweep_runner_overhead(quick: bool) -> None:
+    """experiments.runner (spec expansion + JSONL store + checkpointing
+    plumbing) vs calling train_vision directly for the same run — the
+    subsystem tax on a short run."""
+    import shutil
+    import tempfile
+
+    from repro.experiments import get_sweep, run_sweep
+    from repro.models.cnn import model_fns
+    from repro.train.trainer import train_vision
+    steps = 20 if quick else 60
+    sweep = get_sweep("generalization-gap", steps=steps)
+    spec = sweep.expand()[0]                      # the SB column
+    regime = spec.regime()
+    data = spec.data.build()
+
+    def direct():
+        return train_vision(model_fns(spec.model), spec.model, data,
+                            spec.lb, regime, seed=spec.seed,
+                            track_diffusion=spec.track_diffusion)
+
+    direct()                   # absorb first-call tracing/import overheads
+    t0 = time.perf_counter()
+    direct()
+    t_direct = (time.perf_counter() - t0) * 1e6
+
+    out = tempfile.mkdtemp(prefix="sweep_bench_")
+    try:
+        one = dataclasses.replace(sweep, methods={"SB": sweep.methods["SB"]})
+        t0 = time.perf_counter()
+        run_sweep(one, out, checkpoint_every=max(1, steps // 2))
+        t_runner = (time.perf_counter() - t0) * 1e6
+    finally:
+        shutil.rmtree(out, ignore_errors=True)
+    emit("sweep_runner_direct", t_direct, f"steps={steps}")
+    emit("sweep_runner_overhead", t_runner,
+         f"overhead={(t_runner - t_direct) / t_direct * 100:.1f}%")
+
+
 def roofline_from_dryrun(quick: bool) -> None:
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     if not files:
@@ -317,6 +356,7 @@ BENCHES: Dict[str, Callable] = {
     "appendixB_random_potential": appendixB_random_potential,
     "lm_train_step": lm_train_step,
     "serve_decode_step": serve_decode_step,
+    "sweep_runner_overhead": sweep_runner_overhead,
     "roofline_from_dryrun": roofline_from_dryrun,
 }
 

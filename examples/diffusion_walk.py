@@ -1,13 +1,17 @@
-"""Figure-2 analogue: ultra-slow (logarithmic) diffusion of the weights.
+"""Figure-2 analogue: ultra-slow (logarithmic) diffusion of the weights —
+a thin wrapper over :mod:`repro.experiments`.
 
-Trains the same model at several batch sizes with a constant high LR and
-shows ||w_t - w_0|| against log t: the log-law fit (R^2 near 1) with
-batch-dependent slopes is the paper's evidence for the "random walk on a
-random potential" model with alpha = 2. Also runs the Appendix-B probe
-(loss std vs distance on random rays — ~linear for alpha = 2).
+Runs the ``diffusion`` sweep (the same model at several batch sizes with a
+constant high LR) through the resumable runner and prints the log-t vs
+power-law fits of ||w_t - w_0|| re-fit from the stored distance series: the
+log-law fit (R^2 near 1) with batch-dependent slopes is the paper's evidence
+for the "random walk on a random potential" model with alpha = 2. Also runs
+the Appendix-B probe directly (loss std vs distance on random rays —
+~linear for alpha = 2).
 
 Run:  PYTHONPATH=src python examples/diffusion_walk.py
 """
+import argparse
 import dataclasses
 
 import jax
@@ -15,33 +19,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_models import F1_MNIST
-from repro.core import LargeBatchConfig, Regime
 from repro.core.diffusion import random_potential_probe
 from repro.data.synthetic import teacher_classification
+from repro.experiments import get_sweep, run_sweep
+from repro.experiments.metrics import diffusion_view, format_diffusion
 from repro.models.cnn import model_fns
-from repro.train.trainer import train_vision
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--out", default="experiments/runs")
+    ap.add_argument("--burn-in", type=int, default=2)
+    args = ap.parse_args()
+
+    print("== weight distance vs log t (constant high LR, no drops) ==")
+    sweep = get_sweep("diffusion", steps=args.steps)
+    records = run_sweep(sweep, args.out, log_fn=print)
+    print()
+    print(format_diffusion(diffusion_view(records, burn_in=args.burn_in)))
+    print("(log fit R^2 ~ 1 with exponent << 0.5 == ultra-slow diffusion)")
+
+    print("\n== Appendix B: random-potential probe ==")
     cfg = dataclasses.replace(F1_MNIST, input_shape=(8, 8, 1),
                               hidden_sizes=(128, 128), ghost_batch_size=16)
     data = teacher_classification(3, n_train=4096, n_test=512,
                                   input_shape=(8, 8, 1), n_classes=10)
-
-    print("== weight distance vs log t (constant high LR, no drops) ==")
-    print(f"{'batch':>6s} {'slope':>7s} {'log R^2':>8s} {'pow exp':>8s} "
-          f"{'pow R^2':>8s}")
-    for bs in (32, 128, 512):
-        lb = LargeBatchConfig(batch_size=bs, base_batch_size=bs,
-                              grad_clip=0.0)
-        regime = Regime(base_lr=0.08, total_steps=400, drop_every=10**9)
-        out = train_vision(model_fns(cfg), cfg, data, lb, regime, seed=11)
-        lf, pf = out["log_fit"], out["power_fit"]
-        print(f"{bs:6d} {lf['slope']:7.3f} {lf['r2']:8.4f} "
-              f"{pf['power']:8.3f} {pf['r2']:8.4f}")
-    print("(log fit R^2 ~ 1 with exponent << 0.5 == ultra-slow diffusion)")
-
-    print("\n== Appendix B: random-potential probe ==")
     init_fn, apply_fn = model_fns(cfg)
     params, state = init_fn(jax.random.PRNGKey(0), cfg)
     x = jnp.asarray(data.x_train[:512])

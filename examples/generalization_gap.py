@@ -1,26 +1,24 @@
 """The paper's Table-1 experiment (reduced scale): the generalization gap and
-its elimination.
+its elimination — a thin wrapper over :mod:`repro.experiments`.
 
-Trains the F1-style MLP on a synthetic classification task with the five
-method columns — SB, LB, LB+LR, LB+LR+GBN, LB+LR+GBN+RA — and prints the
-validation-accuracy table. Expected qualitative result (matches the paper):
+Runs the ``generalization-gap`` sweep (method columns SB, LB, LB+LR,
+LB+LR+GBN, LB+LR+GBN+RA) through the resumable runner and prints the
+aggregated Table-1 view. Expected qualitative result (matches the paper):
 
     SB > LB              (the generalization gap appears)
     LB+LR > LB           (sqrt LR scaling closes much of it)
     LB+LR+GBN >= LB+LR   (ghost batch norm helps further)
     LB+..+RA ~ SB        (regime adaptation eliminates it)
 
+Records accumulate in ``--out``/generalization-gap/records.jsonl; rerunning
+skips finished runs and resumes an interrupted one from its checkpoint.
+
 Run:  PYTHONPATH=src python examples/generalization_gap.py [--steps 1200]
 """
 import argparse
-import dataclasses
-import time
 
-from repro.configs.paper_models import F1_MNIST
-from repro.core import Regime, presets
-from repro.data.synthetic import teacher_classification
-from repro.models.cnn import model_fns
-from repro.train.trainer import train_vision
+from repro.experiments import get_sweep, run_sweep
+from repro.experiments.metrics import format_table1, table1_view
 
 
 def main():
@@ -30,42 +28,32 @@ def main():
     ap.add_argument("--large-batch", type=int, default=1024)
     ap.add_argument("--small-batch", type=int, default=32)
     ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--out", default="experiments/runs")
+    ap.add_argument("--fresh", action="store_true",
+                    help="ignore existing records and rerun")
+    ap.add_argument("--mesh", action="store_true",
+                    help="fan runs over the ('data',) mesh when usable")
     args = ap.parse_args()
 
-    cfg = dataclasses.replace(F1_MNIST, input_shape=(8, 8, 1),
-                              hidden_sizes=(192, 192, 192),
-                              ghost_batch_size=16)
-    data = teacher_classification(7, n_train=6144, n_test=1024,
-                                  input_shape=(8, 8, 1), n_classes=10,
-                                  label_noise=0.05)
-    small = Regime(base_lr=0.08, total_steps=args.steps,
-                   drop_every=args.steps // 3, drop_factor=0.2)
-    cols = presets(args.large_batch, args.small_batch, ghost=16)
+    sweep = get_sweep("generalization-gap", steps=args.steps,
+                      large_batch=args.large_batch,
+                      small_batch=args.small_batch,
+                      seeds=tuple(range(args.seeds)), use_mesh=args.mesh)
+    records = run_sweep(sweep, args.out, resume=not args.fresh,
+                        checkpoint_every=max(100, args.steps // 8),
+                        log_fn=print)
 
-    print(f"{'method':>14s} {'steps':>6s} {'val_acc':>8s} {'train_acc':>9s} "
-          f"{'|w-w0|':>7s}")
-    results = {}
-    for name, lb in cols.items():
-        accs, dists, steps = [], [], 0
-        for seed in range(args.seeds):
-            regime = lb.build_regime(small)
-            t0 = time.time()
-            out = train_vision(model_fns(cfg), cfg, data, lb, regime,
-                               seed=5 + seed)
-            accs.append(out["final_acc"])
-            dists.append(out["history"]["distance"][-1])
-            steps = out["steps"]
-        acc = sum(accs) / len(accs)
-        results[name] = acc
-        print(f"{name:>14s} {steps:6d} {acc:8.4f} "
-              f"{out['train_acc']:9.4f} {sum(dists)/len(dists):7.3f}")
+    rows = table1_view(records)
+    print()
+    print(format_table1(rows))
 
-    gap = results["SB"] - results["LB"]
-    closed = results["LB+LR+GBN+RA"] - results["LB"]
+    acc = {r["method"]: r["val_acc_mean"] for r in rows}
+    gap = acc["SB"] - acc["LB"]
+    closed = acc["LB+LR+GBN+RA"] - acc["LB"]
     print(f"\ngeneralization gap (SB - LB):        {gap:+.4f}")
     print(f"recovered by LR+GBN+RA (vs LB):      {closed:+.4f}")
     print(f"final (RA) vs small batch:           "
-          f"{results['LB+LR+GBN+RA'] - results['SB']:+.4f}")
+          f"{acc['LB+LR+GBN+RA'] - acc['SB']:+.4f}")
 
 
 if __name__ == "__main__":

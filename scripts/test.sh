@@ -4,15 +4,25 @@
 # fail loudly on their own, before any test runs.
 #
 # Usage:
-#   scripts/test.sh              # full tier-1 suite
+#   scripts/test.sh              # full tier-1 suite (~20 min)
+#   scripts/test.sh --quick      # tier-0 quick gate (seconds-scale subset)
 #   scripts/test.sh -m tier1     # just the tier1-marked core subset
 #   scripts/test.sh tests/test_kernels.py -k gbn   # any pytest args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+args=()
+for a in "$@"; do
+  if [[ "$a" == "--quick" ]]; then
+    args+=(-m tier0)
+  else
+    args+=("$a")
+  fi
+done
+
 echo "== collect =="
 python -m pytest --collect-only -q >/dev/null
 
 echo "== run =="
-exec python -m pytest -x -q "$@"
+exec python -m pytest -x -q "${args[@]+"${args[@]}"}"

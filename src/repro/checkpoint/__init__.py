@@ -1,3 +1,3 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save
+from repro.checkpoint.checkpoint import latest_step, load_meta, restore, save
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["latest_step", "load_meta", "restore", "save"]

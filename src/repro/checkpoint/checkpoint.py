@@ -23,17 +23,38 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     return flat
 
 
+_KIND_PREFIX = {"params": "params", "opt": "opt", "state": "state"}
+
+
 def save(path: str, step: int, params: Any, opt_state: Any = None,
-         extra: Optional[Dict[str, Any]] = None) -> None:
+         extra: Optional[Dict[str, Any]] = None,
+         bn_state: Any = None) -> None:
     os.makedirs(path, exist_ok=True)
     np.savez(os.path.join(path, f"params_{step}.npz"), **_flatten(params))
     if opt_state is not None:
         np.savez(os.path.join(path, f"opt_{step}.npz"), **_flatten(opt_state))
+    if bn_state is not None:
+        np.savez(os.path.join(path, f"state_{step}.npz"),
+                 **_flatten(bn_state))
     meta = {"step": step, **(extra or {})}
     with open(os.path.join(path, f"meta_{step}.json"), "w") as f:
         json.dump(meta, f)
-    with open(os.path.join(path, "latest"), "w") as f:
+    # write the pointer last and atomically (temp + rename), so a kill at
+    # any point mid-save leaves either the previous pointer or the new one
+    # — never a truncated/partial "latest"
+    tmp = os.path.join(path, "latest.tmp")
+    with open(tmp, "w") as f:
         f.write(str(step))
+    os.replace(tmp, os.path.join(path, "latest"))
+
+
+def load_meta(path: str, step: Optional[int] = None) -> Dict[str, Any]:
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    with open(os.path.join(path, f"meta_{step}.json")) as f:
+        return json.load(f)
 
 
 def latest_step(path: str) -> Optional[int]:
@@ -51,8 +72,7 @@ def restore(path: str, template: Any, *, step: Optional[int] = None,
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {path}")
-    fname = os.path.join(path, f"{'params' if kind == 'params' else 'opt'}"
-                         f"_{step}.npz")
+    fname = os.path.join(path, f"{_KIND_PREFIX[kind]}_{step}.npz")
     data = np.load(fname)
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []

@@ -6,14 +6,18 @@ from repro.core.diffusion import (DiffusionTracker, fit_log_diffusion,
 from repro.core.gbn import equal_weight_bn_apply, gbn_apply, gbn_init
 from repro.core.large_batch import LargeBatchConfig, presets
 from repro.core.lr_scaling import noise_sigma, scale_lr
+from repro.core.metrics import MetricsLogger
 from repro.core.noise import ghost_noise_grads, multiplicative_noise_grads
-from repro.core.regime import Regime, adapt_regime, epochs_to_steps
+from repro.core.regime import (BatchSchedule, Regime, adapt_regime,
+                               batch_size_increase, epochs_to_steps)
 
 __all__ = [
     "clip_by_global_norm", "global_norm", "DiffusionTracker",
     "fit_log_diffusion", "fit_power_diffusion", "random_potential_probe",
     "weight_distance", "equal_weight_bn_apply", "gbn_apply", "gbn_init",
     "LargeBatchConfig", "presets", "noise_sigma", "scale_lr",
+    "MetricsLogger",
     "ghost_noise_grads", "multiplicative_noise_grads", "Regime",
-    "adapt_regime", "epochs_to_steps",
+    "BatchSchedule", "adapt_regime", "batch_size_increase",
+    "epochs_to_steps",
 ]

@@ -73,18 +73,40 @@ def fit_power_diffusion(steps: Sequence[int], distances: Sequence[float],
 
 
 class DiffusionTracker:
-    """Accumulates (step, ||w_t - w_0||) pairs during training."""
+    """Accumulates (step, ||w_t - w_0||) pairs during training.
+
+    ``record`` only enqueues the distance computation on device and returns
+    the (async) scalar array — it never blocks the dispatch loop on a host
+    transfer. The host-side floats are materialized in one batched sync the
+    first time ``distances`` is read (typically at fit/report time).
+    """
 
     def __init__(self, params0: Any):
         self.params0 = jax.tree.map(lambda a: a.astype(jnp.float32), params0)
         self.steps: List[int] = []
-        self.distances: List[float] = []
+        self._pending: List[jax.Array] = []   # device scalars, not yet synced
+        self._host: List[float] = []
+        self._dist_fn = jax.jit(weight_distance)
 
-    def record(self, step: int, params: Any) -> float:
-        d = float(weight_distance(params, self.params0))
+    def record(self, step: int, params: Any) -> jax.Array:
+        d = self._dist_fn(params, self.params0)
         self.steps.append(step)
-        self.distances.append(d)
+        self._pending.append(d)
         return d
+
+    @property
+    def distances(self) -> List[float]:
+        if self._pending:
+            jax.block_until_ready(self._pending)      # one sync for the batch
+            self._host.extend(float(d) for d in self._pending)
+            self._pending.clear()
+        return self._host
+
+    def load(self, steps: Sequence[int], distances: Sequence[float]) -> None:
+        """Restore a previously recorded series (checkpoint resume)."""
+        _ = self.distances                            # flush pending first
+        self.steps = list(steps)
+        self._host = [float(d) for d in distances]
 
     def log_fit(self, burn_in: int = 1) -> Dict[str, float]:
         return fit_log_diffusion(self.steps, self.distances, burn_in)

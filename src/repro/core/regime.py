@@ -51,6 +51,64 @@ class Regime:
         )
 
 
+@dataclass(frozen=True)
+class BatchSchedule:
+    """"Don't decay the learning rate, increase the batch size" (Smith et
+    al. 2018) — the comparison column from related work: keep the LR
+    constant and grow the batch by ``1/drop_factor`` wherever the reference
+    regime would have dropped the LR, so the gradient-noise scale follows
+    the same trajectory.
+
+    ``batch_at`` is host-side (plain int): the runner re-jits per distinct
+    batch shape, which happens once per growth phase.
+    """
+
+    base_batch: int
+    max_batch: int
+    grow_every: int                  # steps between growths (= drop_every)
+    grow_factor: float = 5.0         # = 1 / drop_factor of the LR regime
+    round_to: int = 1                # keep ghost-batch divisibility
+
+    def batch_at(self, step: int) -> int:
+        n = int(step) // self.grow_every
+        b = self.base_batch * self.grow_factor ** n
+        b = int(min(b, self.max_batch))
+        b = max(self.round_to, (b // self.round_to) * self.round_to)
+        return min(b, self.max_batch)
+
+    def phases(self, total_steps: int) -> Sequence[int]:
+        """Distinct batch sizes reached within ``total_steps``."""
+        seen, out = set(), []
+        for s in range(0, total_steps, self.grow_every):
+            b = self.batch_at(s)
+            if b not in seen:
+                seen.add(b)
+                out.append(b)
+        return out
+
+
+def constant_lr(regime: Regime) -> Regime:
+    """The regime with its LR decay removed (warmup kept) — the schedule a
+    batch-growth run trains under. Both :func:`batch_size_increase` and
+    ``RunSpec.regime()`` build it here so the mapping cannot drift."""
+    return dataclasses.replace(regime, drop_factor=1.0)
+
+
+def batch_size_increase(small_batch_regime: Regime, *, base_batch: int,
+                        max_batch: int, round_to: int = 1
+                        ) -> tuple[Regime, BatchSchedule]:
+    """Map an LR-decay regime onto its Smith-et-al. equivalent: a constant-LR
+    regime paired with a batch-growth schedule (grow where the LR dropped).
+    """
+    const = constant_lr(small_batch_regime)
+    sched = BatchSchedule(
+        base_batch=base_batch, max_batch=max_batch,
+        grow_every=small_batch_regime.drop_every,
+        grow_factor=1.0 / small_batch_regime.drop_factor,
+        round_to=round_to)
+    return const, sched
+
+
 def adapt_regime(small_batch_regime: Regime, *, batch_size: int,
                  base_batch_size: int, lr_rule: str = "sqrt",
                  regime_adaptation: bool = True) -> Regime:

@@ -1,0 +1,24 @@
+"""Experiment subsystem: declarative sweeps, a resumable runner, and a
+structured metrics store for the paper's Table-1 / Figure-2 studies.
+
+- :mod:`repro.experiments.spec` — ``RunSpec`` / ``SweepSpec`` dataclasses
+  with grid expansion and stable run IDs.
+- :mod:`repro.experiments.metrics` — ``ResultsStore`` (append-only JSONL
+  run records + Table-1 / diffusion aggregation) and the re-exported
+  ``MetricsLogger`` (lives in :mod:`repro.core.metrics`, where the trainers
+  log into it).
+- :mod:`repro.experiments.runner` — resumable sweep runner over
+  ``train_vision`` / ``train_lm`` with ``repro.checkpoint`` run state.
+- :mod:`repro.experiments.registry` — the paper's sweeps (generalization-gap
+  grid, diffusion study, batch-size-increase column).
+- :mod:`repro.experiments.cli` — ``python -m repro.experiments.cli``.
+"""
+from repro.experiments.metrics import MetricsLogger, ResultsStore
+from repro.experiments.registry import SWEEPS, get_sweep
+from repro.experiments.runner import run_one, run_sweep
+from repro.experiments.spec import DataSpec, RunSpec, SweepSpec
+
+__all__ = [
+    "DataSpec", "RunSpec", "SweepSpec", "MetricsLogger", "ResultsStore",
+    "run_sweep", "run_one", "get_sweep", "SWEEPS",
+]

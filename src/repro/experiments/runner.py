@@ -1,0 +1,157 @@
+"""Resumable sweep runner.
+
+``run_sweep`` expands a :class:`~repro.experiments.spec.SweepSpec` into its
+runs (deterministic order), skips every run whose ``run_id`` is already in
+the sweep's :class:`~repro.experiments.metrics.ResultsStore`, and executes
+the rest. Each run trains with ``checkpoint_dir`` under the sweep directory,
+so a sweep killed mid-run restarts at the first unfinished run AND that run
+resumes from its last checkpointed (params, bn_state, opt_state, epoch,
+cursor, metrics) — the restarted sweep produces the same JSONL records as an
+uninterrupted one (shuffling is a pure function of (seed, epoch)).
+
+Runs fan over the 1-D ``("data",)`` mesh when more than one device is
+available and the run's batch geometry shards evenly
+(:func:`repro.train.data_parallel.mesh_compatible`).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.experiments.metrics import MetricsLogger, ResultsStore
+from repro.experiments.spec import RunSpec, SweepSpec
+
+
+def _mesh_for(spec: RunSpec):
+    """The ("data",) mesh if this run can use it, else None."""
+    if not spec.use_mesh:
+        return None
+    import jax
+    from repro.launch.mesh import make_data_mesh
+    from repro.train.data_parallel import mesh_compatible
+    if len(jax.devices()) < 2:
+        return None
+    mesh = make_data_mesh()
+    sizes = (spec.batch_schedule.phases(spec.regime().total_steps)
+             if spec.batch_schedule is not None else [spec.lb.batch_size])
+    if all(mesh_compatible(spec.lb, mesh, batch_size=b) for b in sizes):
+        return mesh
+    return None
+
+
+def run_one(spec: RunSpec, *, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 0,
+            log_fn: Optional[Callable[[str], None]] = None
+            ) -> Dict[str, Any]:
+    """Execute one run and return its JSONL record (not yet stored)."""
+    t0 = time.time()
+    regime = spec.regime()
+    if spec.lm_arch:
+        out = _run_lm(spec, regime, checkpoint_dir=checkpoint_dir,
+                      checkpoint_every=checkpoint_every, log_fn=log_fn)
+    else:
+        out = _run_vision(spec, regime, checkpoint_dir=checkpoint_dir,
+                          checkpoint_every=checkpoint_every, log_fn=log_fn)
+    logger: MetricsLogger = out["metrics"]
+    record: Dict[str, Any] = {
+        "run_id": spec.run_id,
+        "sweep": spec.name,
+        "method": spec.method,
+        "seed": spec.seed,
+        "batch_size": spec.batch_size,
+        "steps": out["steps"],
+        "wall_s": round(time.time() - t0, 3),
+        "metrics": logger.to_json(),
+        "spec": spec.to_json(),
+    }
+    for k in ("final_acc", "best_acc", "train_acc", "final_ce"):
+        if k in out:
+            record[k] = float(out[k])
+    for k in ("log_fit", "power_fit"):
+        if k in out:
+            record[k] = out[k]
+    return record
+
+
+def _run_vision(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
+                log_fn):
+    from repro.models.cnn import model_fns
+    from repro.train.trainer import train_vision
+    data = spec.data.build()
+    return train_vision(
+        model_fns(spec.model), spec.model, data, spec.lb, regime,
+        seed=spec.seed, eval_every=spec.eval_every,
+        track_diffusion=spec.track_diffusion,
+        diffusion_every=spec.diffusion_every, log_fn=log_fn,
+        use_kernels=spec.use_kernels, mesh=_mesh_for(spec),
+        weight_decay=spec.weight_decay,
+        batch_schedule=spec.batch_schedule,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every)
+
+
+def _run_lm(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
+            log_fn):
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.data.synthetic import lm_sequences, token_lm
+    from repro.train.trainer import train_lm
+    cfg = dataclasses.replace(get_config(spec.lm_arch).reduced(),
+                              dtype="float32",
+                              vocab_size=spec.lm_vocab_size)
+    stream = token_lm(spec.data.seed, vocab_size=spec.lm_vocab_size,
+                      n_tokens=spec.lm_n_tokens)
+    rows = lm_sequences(stream, spec.lm_seq_len)
+    holdout = max(spec.lb.batch_size, rows.shape[0] // 10)
+    return train_lm(
+        cfg, spec.lb, regime, rows, seed=spec.seed,
+        eval_every=spec.eval_every, holdout=holdout,
+        use_kernels=spec.use_kernels, weight_decay=spec.weight_decay,
+        track_diffusion=spec.track_diffusion,
+        diffusion_every=spec.diffusion_every, log_fn=log_fn,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every)
+
+
+def run_sweep(sweep: SweepSpec, out_dir: str, *, resume: bool = True,
+              checkpoint_every: int = 0,
+              keep_checkpoints: bool = False,
+              log_fn: Optional[Callable[[str], None]] = None
+              ) -> List[Dict[str, Any]]:
+    """Run (or resume) every run of ``sweep``; returns all its records.
+
+    ``out_dir/<sweep.name>/records.jsonl`` accumulates one record per
+    finished run; ``out_dir/<sweep.name>/ckpt/<run_id>/`` holds the
+    in-flight run state (deleted on run completion unless
+    ``keep_checkpoints``). With ``resume=False`` the store is cleared and
+    every run re-executes.
+    """
+    root = os.path.join(out_dir, sweep.name)
+    store = ResultsStore(root)
+    if not resume and os.path.exists(root):
+        shutil.rmtree(root)
+    specs = sweep.expand()
+    done = store.completed_run_ids() if resume else set()
+    for i, spec in enumerate(specs):
+        tag = f"[{i + 1}/{len(specs)}] {spec.method} b={spec.batch_size} " \
+              f"seed={spec.seed}"
+        ckpt_dir = os.path.join(root, "ckpt", spec.run_id)
+        if spec.run_id in done:
+            if not keep_checkpoints and os.path.exists(ckpt_dir):
+                # a kill between store.append and cleanup orphans the
+                # checkpoint; reap it once the record exists
+                shutil.rmtree(ckpt_dir)
+            if log_fn:
+                log_fn(f"{tag}: done ({spec.run_id}), skipping")
+            continue
+        if log_fn:
+            log_fn(f"{tag}: running ({spec.run_id})")
+        record = run_one(spec, checkpoint_dir=ckpt_dir if checkpoint_every
+                         else None,
+                         checkpoint_every=checkpoint_every, log_fn=log_fn)
+        store.append(record)
+        if not keep_checkpoints and os.path.exists(ckpt_dir):
+            shutil.rmtree(ckpt_dir)
+    wanted = {s.run_id for s in specs}
+    return [r for r in store.records() if r["run_id"] in wanted]

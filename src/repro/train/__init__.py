@@ -1,11 +1,14 @@
 from repro.train.data_parallel import (dp_gbn_forward,
-                                       make_dp_vision_train_step)
+                                       make_dp_vision_train_step,
+                                       mesh_compatible)
 from repro.train.trainer import (make_lm_eval_step, make_lm_train_step,
                                  make_vision_eval, make_vision_loss_fn,
-                                 make_vision_train_step, train_vision)
+                                 make_vision_train_step, train_lm,
+                                 train_vision)
 
 __all__ = [
-    "dp_gbn_forward", "make_dp_vision_train_step", "make_lm_eval_step",
-    "make_lm_train_step", "make_vision_eval", "make_vision_loss_fn",
-    "make_vision_train_step", "train_vision",
+    "dp_gbn_forward", "make_dp_vision_train_step", "mesh_compatible",
+    "make_lm_eval_step", "make_lm_train_step", "make_vision_eval",
+    "make_vision_loss_fn", "make_vision_train_step", "train_lm",
+    "train_vision",
 ]

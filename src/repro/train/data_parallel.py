@@ -53,6 +53,21 @@ def _pmean_state(state: Params, axis: str) -> Params:
         state)
 
 
+def mesh_compatible(lb: LargeBatchConfig, mesh, *, axis: str = "data",
+                    batch_size: int = 0) -> bool:
+    """True when a batch can shard evenly over ``mesh``: the (possibly
+    schedule-overridden) batch splits across devices AND each device's local
+    shard still splits into whole ghost batches — the invariant that makes
+    the DP step's statistics match the single-device GBN step. The sweep
+    runner uses this to decide per run whether to fan over the mesh."""
+    b = batch_size or lb.batch_size
+    ndev = mesh.shape[axis]
+    if b % ndev:
+        return False
+    local = b // ndev
+    return (not lb.use_gbn) or local % lb.ghost_batch_size == 0
+
+
 def make_dp_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
                               lb: LargeBatchConfig, regime: Regime, mesh, *,
                               weight_decay: float = 5e-4,

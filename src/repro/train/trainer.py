@@ -10,8 +10,7 @@
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.configs.paper_models import VisionModelConfig
 from repro.core.diffusion import DiffusionTracker
 from repro.core.large_batch import LargeBatchConfig
+from repro.core.metrics import MetricsLogger
 from repro.core.regime import Regime
 from repro.models import transformer as T
 from repro.optim import sgd
@@ -151,23 +151,96 @@ def make_vision_eval(model_apply: Callable, cfg: VisionModelConfig
     return evaluate
 
 
+def _epoch_perm(shuffle_key: jax.Array, epoch: int, n: int) -> np.ndarray:
+    """Deterministic per-epoch shuffle: a pure function of (key, epoch), so
+    a run resumed at any (epoch, cursor) sees the same batch sequence as an
+    uninterrupted one."""
+    return np.asarray(
+        jax.random.permutation(jax.random.fold_in(shuffle_key, epoch), n))
+
+
+def _record_diffusion(step: int, total_steps: int, every: int) -> bool:
+    if every > 0:
+        return step % every == 0
+    # auto cadence: dense early (the log-t regime), sparse after
+    return step < 32 or step % max(1, total_steps // 64) == 0
+
+
+def _save_run_state(checkpoint_dir: str, step: int, params, bn_state,
+                    opt_state, *, epoch: int, cursor: int,
+                    logger, tracker) -> None:
+    from repro import checkpoint as ckpt
+    extra: Dict[str, Any] = {"epoch": epoch, "cursor": cursor,
+                             "metrics": logger.to_json()}
+    if tracker is not None:
+        extra["tracker"] = {"steps": list(tracker.steps),
+                            "distances": list(tracker.distances)}
+    ckpt.save(checkpoint_dir, step, params, opt_state, extra=extra,
+              bn_state=bn_state)
+
+
+def _restore_run_state(checkpoint_dir, params, opt_state, bn_state, tracker):
+    """Shared resume path: restore trees + (step, epoch, cursor, logger)
+    from the latest checkpoint, or the fresh-run defaults when none exists.
+    ``bn_state=None`` (the LM loop) skips the BN-state tree."""
+    from repro import checkpoint as ckpt
+    if not checkpoint_dir or ckpt.latest_step(checkpoint_dir) is None:
+        return params, opt_state, bn_state, 0, 0, 0, MetricsLogger()
+    params, _ = ckpt.restore(checkpoint_dir, params)
+    opt_state, _ = ckpt.restore(checkpoint_dir, opt_state, kind="opt")
+    if bn_state is not None:
+        bn_state, _ = ckpt.restore(checkpoint_dir, bn_state, kind="state")
+    meta = ckpt.load_meta(checkpoint_dir)
+    logger = MetricsLogger.from_json(meta["metrics"])
+    if tracker is not None and "tracker" in meta:
+        tracker.load(meta["tracker"]["steps"], meta["tracker"]["distances"])
+    return (params, opt_state, bn_state, meta["step"], meta["epoch"],
+            meta["cursor"], logger)
+
+
 def train_vision(model_fns, cfg: VisionModelConfig, data,
                  lb: LargeBatchConfig, regime: Regime, *, seed: int = 0,
                  eval_every: int = 0, track_diffusion: bool = True,
+                 diffusion_every: int = 0,
                  log_fn: Optional[Callable[[str], None]] = None,
                  use_kernels: bool = False, mesh=None,
-                 weight_decay: float = 5e-4) -> Dict[str, Any]:
+                 weight_decay: float = 5e-4,
+                 batch_schedule=None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 resume: bool = True) -> Dict[str, Any]:
     """Full training run; returns final/best accuracy + diffusion trace.
 
     With ``mesh`` (a 1-D ``("data",)`` mesh from
     :func:`repro.launch.mesh.make_data_mesh`) the step runs sharded
     data-parallel: each device normalizes with its own ghost-batch
     statistics and only gradients cross devices.
+
+    The PRNG is split three ways — init / per-step gradient noise / data
+    shuffling — so no consumer reuses another's key. Shuffling is a pure
+    function of (seed, epoch), which together with ``checkpoint_dir`` +
+    ``checkpoint_every`` makes runs resumable: an interrupted run restarts
+    from the last saved (params, bn_state, opt_state, epoch, cursor,
+    metrics) and replays the identical batch sequence.
+
+    ``batch_schedule`` (a :class:`repro.core.regime.BatchSchedule`) grows
+    the batch size during training instead of decaying the LR (Smith et
+    al. 2018); distinct batch sizes re-jit once each.
+
+    ``metrics`` output: the returned dict carries a
+    :class:`repro.core.metrics.MetricsLogger` under ``"metrics"``
+    (the legacy ``"history"`` dict is derived from it).
     """
     init_fn, apply_fn = model_fns
-    rng = jax.random.PRNGKey(seed)
-    params, bn_state = init_fn(rng, cfg)
+    init_key, noise_key, shuffle_key = jax.random.split(
+        jax.random.PRNGKey(seed), 3)
+    params, bn_state = init_fn(init_key, cfg)
     opt_state = sgd.init(params)
+    tracker = DiffusionTracker(params) if track_diffusion else None
+    params, opt_state, bn_state, step, epoch, cursor, logger = \
+        _restore_run_state(checkpoint_dir if resume else None,
+                           params, opt_state, bn_state, tracker)
+
     if mesh is not None:
         from repro.train.data_parallel import make_dp_vision_train_step
         step_fn = jax.jit(make_dp_vision_train_step(
@@ -178,47 +251,146 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
             apply_fn, cfg, lb, regime, use_kernels=use_kernels,
             weight_decay=weight_decay))
     evaluate = make_vision_eval(apply_fn, cfg)
-    tracker = DiffusionTracker(params) if track_diffusion else None
 
-    nprng = np.random.RandomState(seed + 1)
     x_tr, y_tr = data.x_train, data.y_train
     n = x_tr.shape[0]
-    steps_per_epoch = max(1, n // lb.batch_size)
-    history = {"val_acc": [], "train_loss": [], "steps": [],
-               "distance": [], "dist_steps": []}
-    best = 0.0
-    step = 0
+    perm = _epoch_perm(shuffle_key, epoch, n)
+    best = logger.max("val_acc")
     while step < regime.total_steps:
-        for idx in np.array_split(nprng.permutation(n),
-                                  max(1, n // lb.batch_size)):
-            if step >= regime.total_steps:
-                break
-            if idx.size < lb.batch_size:
-                continue
-            x = jnp.asarray(x_tr[idx])
-            y = jnp.asarray(y_tr[idx])
-            params, bn_state, opt_state, m = step_fn(
-                params, bn_state, opt_state, x, y, jnp.int32(step),
-                jax.random.fold_in(rng, step))
-            if tracker is not None and (
-                    step < 32 or step % max(1, regime.total_steps // 64) == 0):
-                d = tracker.record(step + 1, params)
-                history["distance"].append(d)
-                history["dist_steps"].append(step + 1)
-            if eval_every and step % eval_every == 0:
-                acc = evaluate(params, bn_state, data.x_test, data.y_test)
-                history["val_acc"].append(acc)
-                history["steps"].append(step)
-                history["train_loss"].append(float(m["loss"]))
-                best = max(best, acc)
-                if log_fn:
-                    log_fn(f"step {step:5d} loss {float(m['loss']):.4f} "
-                           f"val_acc {acc:.4f} lr {float(m['lr']):.4f}")
-            step += 1
+        b = (batch_schedule.batch_at(step) if batch_schedule is not None
+             else lb.batch_size)
+        if b > n:
+            if mesh is not None:
+                # capping would silently break the divisibility the mesh
+                # gating validated against the CONFIGURED batch size
+                raise ValueError(f"batch {b} > dataset {n} on a mesh run")
+            b = n
+        if cursor + b > n:
+            epoch += 1
+            cursor = 0
+            perm = _epoch_perm(shuffle_key, epoch, n)
+        idx = perm[cursor:cursor + b]
+        cursor += b
+        x = jnp.asarray(x_tr[idx])
+        y = jnp.asarray(y_tr[idx])
+        params, bn_state, opt_state, m = step_fn(
+            params, bn_state, opt_state, x, y, jnp.int32(step),
+            jax.random.fold_in(noise_key, step))
+        if tracker is not None and _record_diffusion(
+                step, regime.total_steps, diffusion_every):
+            tracker.record(step + 1, params)
+        if eval_every and step % eval_every == 0:
+            acc = evaluate(params, bn_state, data.x_test, data.y_test)
+            logger.log(step, val_acc=acc, train_loss=float(m["loss"]),
+                       lr=float(m["lr"]))
+            best = max(best, acc)
+            if log_fn:
+                log_fn(f"step {step:5d} loss {float(m['loss']):.4f} "
+                       f"val_acc {acc:.4f} lr {float(m['lr']):.4f}")
+        step += 1
+        if (checkpoint_dir and checkpoint_every
+                and step % checkpoint_every == 0
+                and step < regime.total_steps):
+            _save_run_state(checkpoint_dir, step, params, bn_state,
+                            opt_state, epoch=epoch, cursor=cursor,
+                            logger=logger, tracker=tracker)
     final = evaluate(params, bn_state, data.x_test, data.y_test)
     train_acc = evaluate(params, bn_state, x_tr[:2048], y_tr[:2048])
+    if tracker is not None:
+        logger.set_series("distance", tracker.steps, tracker.distances)
     out = {"final_acc": final, "best_acc": max(best, final),
-           "train_acc": train_acc, "history": history, "steps": step}
+           "train_acc": train_acc, "history": logger.to_history(),
+           "metrics": logger, "steps": step}
+    if tracker is not None:
+        out["log_fit"] = tracker.log_fit(burn_in=2)
+        out["power_fit"] = tracker.power_fit(burn_in=2)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LM training loop (the same recipe on the assigned architectures)
+# ---------------------------------------------------------------------------
+
+
+def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
+             rows: np.ndarray, *, seed: int = 0, eval_every: int = 0,
+             holdout: int = 0, use_kernels: bool = False,
+             weight_decay: float = 0.0, track_diffusion: bool = False,
+             diffusion_every: int = 0,
+             log_fn: Optional[Callable[[str], None]] = None,
+             checkpoint_dir: Optional[str] = None,
+             checkpoint_every: int = 0, resume: bool = True
+             ) -> Dict[str, Any]:
+    """LM twin of :func:`train_vision`: drives :func:`make_lm_train_step`
+    over (N, seq_len) token rows with the same structured metrics,
+    deterministic shuffling, and checkpoint/resume contract.
+
+    ``holdout`` rows from the end are held out for CE evaluation.
+    """
+    init_key, noise_key, shuffle_key = jax.random.split(
+        jax.random.PRNGKey(seed), 3)
+    params = T.init_params(init_key, cfg)
+    opt_state = sgd.init(params)
+    tracker = DiffusionTracker(params) if track_diffusion else None
+    params, opt_state, _, step, epoch, cursor, logger = \
+        _restore_run_state(checkpoint_dir if resume else None,
+                           params, opt_state, None, tracker)
+
+    step_fn = jax.jit(make_lm_train_step(
+        cfg, lb, regime, weight_decay=weight_decay,
+        use_kernels=use_kernels))
+    eval_fn = jax.jit(make_lm_eval_step(cfg, use_kernels=use_kernels))
+
+    train_rows = rows[: rows.shape[0] - holdout] if holdout else rows
+    eval_rows = rows[rows.shape[0] - holdout:] if holdout else rows[:0]
+    n = train_rows.shape[0]
+    b = lb.batch_size
+    if n < b:
+        raise ValueError(f"{n} rows < batch_size {b}")
+
+    def eval_ce() -> float:
+        if eval_rows.shape[0] == 0:
+            return float("nan")
+        ces = [float(eval_fn(params,
+                             {"tokens": jnp.asarray(eval_rows[i:i + b])}))
+               for i in range(0, eval_rows.shape[0] - b + 1, b)] or [
+            float(eval_fn(params, {"tokens": jnp.asarray(eval_rows)}))]
+        return float(np.mean(ces))
+
+    perm = _epoch_perm(shuffle_key, epoch, n)
+    while step < regime.total_steps:
+        if cursor + b > n:
+            epoch += 1
+            cursor = 0
+            perm = _epoch_perm(shuffle_key, epoch, n)
+        idx = perm[cursor:cursor + b]
+        cursor += b
+        batch = {"tokens": jnp.asarray(train_rows[idx])}
+        params, opt_state, m = step_fn(params, opt_state, batch,
+                                       jnp.int32(step),
+                                       jax.random.fold_in(noise_key, step))
+        if tracker is not None and _record_diffusion(
+                step, regime.total_steps, diffusion_every):
+            tracker.record(step + 1, params)
+        if eval_every and step % eval_every == 0:
+            ce = eval_ce()
+            logger.log(step, eval_ce=ce, train_loss=float(m["loss"]),
+                       lr=float(m["lr"]))
+            if log_fn:
+                log_fn(f"step {step:5d} loss {float(m['loss']):.4f} "
+                       f"eval_ce {ce:.4f}")
+        step += 1
+        if (checkpoint_dir and checkpoint_every
+                and step % checkpoint_every == 0
+                and step < regime.total_steps):
+            _save_run_state(checkpoint_dir, step, params, None, opt_state,
+                            epoch=epoch, cursor=cursor, logger=logger,
+                            tracker=tracker)
+    final_ce = eval_ce()
+    if tracker is not None:
+        logger.set_series("distance", tracker.steps, tracker.distances)
+    out = {"final_ce": final_ce, "metrics": logger,
+           "history": logger.to_history(), "steps": step}
     if tracker is not None:
         out["log_fit"] = tracker.log_fit(burn_in=2)
         out["power_fit"] = tracker.power_fit(burn_in=2)

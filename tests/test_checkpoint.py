@@ -6,10 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore, save
+from repro.checkpoint import latest_step, load_meta, restore, save
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.optim import sgd
+
+pytestmark = pytest.mark.tier0
 
 
 def test_roundtrip(tmp_path):
@@ -29,6 +31,24 @@ def test_roundtrip(tmp_path):
     ropt, _ = restore(str(tmp_path), jax.tree.map(jnp.zeros_like, opt),
                       kind="opt")
     np.testing.assert_array_equal(np.asarray(ropt.step), np.asarray(opt.step))
+
+
+def test_bn_state_and_meta_roundtrip(tmp_path):
+    """The run-state checkpoint the sweep runner relies on: BN running
+    statistics (incl. bool 'initialized' flags) and the JSON meta."""
+    bn = {"stages": [{"mean": jnp.ones((4,)), "var": 2.0 * jnp.ones((4,)),
+                      "initialized": jnp.ones((), jnp.bool_)}]}
+    params = {"w": jnp.arange(3.0)}
+    save(str(tmp_path), 11, params, bn_state=bn,
+         extra={"epoch": 2, "cursor": 96})
+    template = jax.tree.map(jnp.zeros_like, bn)
+    restored, step = restore(str(tmp_path), template, kind="state")
+    assert step == 11
+    assert bool(restored["stages"][0]["initialized"])
+    np.testing.assert_array_equal(
+        np.asarray(restored["stages"][0]["var"]), 2.0 * np.ones((4,)))
+    meta = load_meta(str(tmp_path))
+    assert meta["step"] == 11 and meta["epoch"] == 2 and meta["cursor"] == 96
 
 
 def test_missing_checkpoint_raises(tmp_path):

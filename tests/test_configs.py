@@ -5,6 +5,8 @@ import pytest
 from repro.configs.base import INPUT_SHAPES, shape_applicable
 from repro.configs.registry import combos, get_config, list_archs
 
+pytestmark = pytest.mark.tier0
+
 EXPECTED_LAYERS = {
     "kimi-k2-1t-a32b": 61,
     "falcon-mamba-7b": 64,

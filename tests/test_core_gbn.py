@@ -8,7 +8,7 @@ from _hypothesis_compat import given, settings, st
 from repro.core.gbn import (_cascaded_ema, equal_weight_bn_apply, gbn_apply,
                             gbn_init)
 
-pytestmark = pytest.mark.tier1
+pytestmark = [pytest.mark.tier1, pytest.mark.tier0]
 
 
 def test_ghost_stats_match_small_batch_bn():

@@ -13,6 +13,8 @@ from repro.core.lr_scaling import noise_sigma, scale_lr
 from repro.core.noise import ghost_noise_grads, multiplicative_noise_grads
 from repro.core.regime import Regime, adapt_regime
 
+pytestmark = pytest.mark.tier0
+
 
 def test_sqrt_scaling():
     assert scale_lr(0.1, 4096, 128, "sqrt") == pytest.approx(

@@ -152,15 +152,58 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_dp_multi_device_subprocess():
-    """≥2 simulated devices: per-device ghost stats + step equivalence."""
+def _run_multidev(script: str) -> subprocess.CompletedProcess:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     env["PYTHONPATH"] = str(REPO / "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     env.pop("JAX_PLATFORMS", None)
-    proc = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+    return subprocess.run([sys.executable, "-c", script],
                           capture_output=True, text=True, env=env,
                           cwd=str(REPO), timeout=600)
+
+
+def test_dp_multi_device_subprocess():
+    """≥2 simulated devices: per-device ghost stats + step equivalence."""
+    proc = _run_multidev(MULTIDEV_SCRIPT)
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     assert "MULTIDEV_OK" in proc.stdout
+
+
+RUNNER_MESH_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    assert jax.device_count() == 4, jax.device_count()
+    from repro.configs.paper_models import F1_MNIST
+    from repro.core import LargeBatchConfig
+    from repro.experiments.runner import _mesh_for, run_one
+    from repro.experiments.spec import DataSpec, RunSpec
+
+    model = dataclasses.replace(F1_MNIST, input_shape=(8, 8, 1),
+                                hidden_sizes=(32,), ghost_batch_size=16)
+    spec = RunSpec(name="dp", method="LB", model=model,
+                   data=DataSpec(seed=0, n_train=512, n_test=128,
+                                 input_shape=(8, 8, 1)),
+                   lb=LargeBatchConfig(batch_size=128, base_batch_size=128,
+                                       ghost_batch_size=16),
+                   base_lr=0.08, total_steps=6, drop_every=3, seed=3,
+                   use_mesh=True, track_diffusion=False)
+    mesh = _mesh_for(spec)
+    assert mesh is not None and mesh.shape["data"] == 4, mesh
+    rec = run_one(spec)
+    assert 0.0 <= rec["final_acc"] <= 1.0
+    # batch 72 does not split 4 ways into whole 16-row ghosts -> no mesh
+    bad = dataclasses.replace(
+        spec, lb=LargeBatchConfig(batch_size=72, base_batch_size=72,
+                                  ghost_batch_size=16))
+    assert _mesh_for(bad) is None
+    print("RUNNER_MESH_OK")
+""")
+
+
+def test_sweep_runner_fans_over_mesh_subprocess():
+    """experiments.runner picks up the ("data",) mesh for use_mesh specs
+    whose batch geometry shards evenly, and falls back otherwise."""
+    proc = _run_multidev(RUNNER_MESH_SCRIPT)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "RUNNER_MESH_OK" in proc.stdout

@@ -8,6 +8,8 @@ from repro.core.diffusion import (DiffusionTracker, fit_log_diffusion,
                                   fit_power_diffusion,
                                   random_potential_probe, weight_distance)
 
+pytestmark = pytest.mark.tier0
+
 
 def test_weight_distance():
     p0 = {"a": jnp.zeros((3,)), "b": jnp.zeros((4,))}
@@ -41,6 +43,43 @@ def test_sqrt_data_prefers_power_law():
     assert pow_fit["power"] == pytest.approx(0.5, abs=1e-6)
 
 
+def test_burn_in_filters_early_points():
+    """Points with t < burn_in are excluded: corrupt the early steps and the
+    fit still recovers the exact law from the tail."""
+    t = np.arange(1, 200)
+    d = 2.5 * np.log(t) + 0.3
+    d[:10] = 100.0                        # transient garbage before burn-in
+    fit = fit_log_diffusion(t, d, burn_in=11)
+    assert fit["slope"] == pytest.approx(2.5, rel=1e-6)
+    assert fit["r2"] == pytest.approx(1.0, abs=1e-9)
+    corrupted = fit_log_diffusion(t, d, burn_in=1)
+    assert abs(corrupted["slope"] - 2.5) > 0.5
+
+
+def test_too_few_points_is_nan():
+    """< 3 surviving points -> NaN fits, not a crash (both laws)."""
+    lf = fit_log_diffusion([1, 2], [0.1, 0.2])
+    assert np.isnan(lf["slope"]) and np.isnan(lf["r2"])
+    lf = fit_log_diffusion(np.arange(1, 100), np.ones(99), burn_in=98)
+    assert np.isnan(lf["slope"])
+    pf = fit_power_diffusion([5, 6], [0.1, 0.2])
+    assert np.isnan(pf["power"]) and np.isnan(pf["r2"])
+    # power fit also drops d <= 0 rows before the log
+    pf = fit_power_diffusion([1, 2, 3, 4], [0.0, 0.0, 0.1, 0.2])
+    assert np.isnan(pf["power"])
+
+
+def test_random_potential_probe_smoke():
+    """Tiny-sample probe returns aligned, finite (distance, loss_std) bins."""
+    rng = jax.random.PRNGKey(2)
+    w0 = {"w": jax.random.normal(rng, (20,))}
+    out = random_potential_probe(lambda p: jnp.sum(p["w"] ** 2), w0, rng,
+                                 n_samples=40, max_radius=4.0, n_bins=4)
+    assert out["distance"].shape == out["loss_std"].shape
+    assert len(out["distance"]) >= 1
+    assert np.all(np.isfinite(out["loss_std"]))
+
+
 def test_tracker_records():
     p0 = {"w": jnp.zeros((2,))}
     tr = DiffusionTracker(p0)
@@ -48,6 +87,23 @@ def test_tracker_records():
         tr.record(t, {"w": jnp.full((2,), float(t))})
     assert len(tr.steps) == 5
     assert tr.distances[-1] == pytest.approx(5 * np.sqrt(2), rel=1e-5)
+
+
+def test_tracker_record_is_lazy_and_batches_sync():
+    """record() keeps the distance on device; the host floats materialize
+    in one batch when .distances is first read, and load() restores a
+    checkpointed series."""
+    tr = DiffusionTracker({"w": jnp.zeros((3,))})
+    for t in range(1, 4):
+        d = tr.record(t, {"w": jnp.full((3,), float(t))})
+        assert isinstance(d, jax.Array)        # no float() per call
+    assert len(tr._pending) == 3 and not tr._host
+    dists = tr.distances
+    assert not tr._pending and len(dists) == 3
+    assert dists[1] == pytest.approx(2 * np.sqrt(3), rel=1e-6)
+    tr2 = DiffusionTracker({"w": jnp.zeros((3,))})
+    tr2.load(tr.steps, tr.distances)
+    assert tr2.log_fit() == tr.log_fit()
 
 
 def test_random_potential_probe_linear_for_quadratic_loss():

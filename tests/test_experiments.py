@@ -1,0 +1,306 @@
+"""Experiment subsystem: spec expansion + stable IDs, metrics store and
+aggregation, resumable runner (run-granular skip AND mid-run checkpoint
+resume determinism), batch-size-increase schedule, mesh gating."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import F1_MNIST
+from repro.core.large_batch import LargeBatchConfig
+from repro.core.regime import BatchSchedule, Regime, batch_size_increase
+from repro.experiments import MetricsLogger, ResultsStore
+from repro.experiments import metrics as M
+from repro.experiments.runner import run_one, run_sweep
+from repro.experiments.spec import (DataSpec, RunSpec, SweepSpec,
+                                    replace_path)
+
+pytestmark = [pytest.mark.tier1, pytest.mark.tier0]
+
+
+def _tiny_spec(**kw) -> RunSpec:
+    model = dataclasses.replace(F1_MNIST, input_shape=(8, 8, 1),
+                                hidden_sizes=(32,), ghost_batch_size=16)
+    base = dict(
+        name="tiny", method="SB", model=model,
+        data=DataSpec(seed=0, n_train=512, n_test=128,
+                      input_shape=(8, 8, 1)),
+        lb=LargeBatchConfig(batch_size=32, base_batch_size=32,
+                            ghost_batch_size=16),
+        base_lr=0.08, total_steps=30, drop_every=10, seed=3)
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+
+def test_run_id_stable_and_content_sensitive():
+    a, b = _tiny_spec(), _tiny_spec()
+    assert a.run_id == b.run_id
+    assert a.run_id != _tiny_spec(seed=4).run_id
+    assert a.run_id != replace_path(a, "lb.batch_size", 64).run_id
+
+
+def test_spec_json_roundtrip():
+    spec = _tiny_spec(batch_schedule=BatchSchedule(
+        base_batch=32, max_batch=128, grow_every=10))
+    again = RunSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.run_id == spec.run_id
+
+
+def test_sweep_expansion_order_and_grid():
+    sweep = SweepSpec(
+        name="s", base=_tiny_spec(),
+        methods={"SB": {}, "LB": {"lb.batch_size": 128}},
+        grid={"base_lr": [0.05, 0.1]}, seeds=(0, 1))
+    specs = sweep.expand()
+    assert len(specs) == 2 * 2 * 2
+    assert [s.method for s in specs[:4]] == ["SB"] * 4
+    assert specs[4].lb.batch_size == 128
+    assert {s.seed for s in specs} == {0, 1}
+    assert len({s.run_id for s in specs}) == len(specs)
+    # deterministic re-expansion
+    assert [s.run_id for s in sweep.expand()] == [s.run_id for s in specs]
+
+
+def test_regime_construction_matches_lb():
+    spec = _tiny_spec(lb=LargeBatchConfig(batch_size=128,
+                                          base_batch_size=32,
+                                          regime_adaptation=False))
+    # no RA: step budget shrinks by the batch ratio
+    assert spec.regime().total_steps == pytest.approx(30 / 4, abs=1)
+    sched_spec = _tiny_spec(batch_schedule=BatchSchedule(
+        base_batch=32, max_batch=128, grow_every=10))
+    r = sched_spec.regime()
+    assert r.total_steps == 30
+    assert float(r.lr_at(0)) == float(r.lr_at(29))     # constant LR
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_logger_roundtrip_and_history():
+    lg = MetricsLogger()
+    lg.log(0, val_acc=0.1, train_loss=2.0)
+    lg.log(10, val_acc=0.5, train_loss=1.0)
+    lg.set_series("distance", [1, 5], [0.1, 0.4])
+    again = MetricsLogger.from_json(lg.to_json())
+    assert again.series("val_acc") == ([0, 10], [0.1, 0.5])
+    assert again.max("val_acc") == 0.5
+    h = again.to_history()
+    assert h["steps"] == [0, 10] and h["dist_steps"] == [1, 5]
+    assert h["distance"] == [0.1, 0.4]
+
+
+def test_results_store_append_only(tmp_path):
+    store = ResultsStore(str(tmp_path))
+    store.append({"run_id": "a", "x": 1})
+    store.append({"run_id": "b", "x": 2})
+    assert [r["run_id"] for r in store.records()] == ["a", "b"]
+    assert store.completed_run_ids() == {"a", "b"}
+    assert ResultsStore(str(tmp_path / "empty")).records() == []
+
+
+def test_table1_view_aggregates_seeds():
+    recs = [
+        {"method": "SB", "batch_size": 32, "seed": s, "steps": 100,
+         "final_acc": 0.8 + 0.02 * s, "train_acc": 0.9} for s in (0, 1)
+    ] + [{"method": "LB", "batch_size": 1024, "seed": 0, "steps": 3,
+          "final_acc": 0.5, "train_acc": 0.6}]
+    rows = M.table1_view(recs)
+    assert [r["method"] for r in rows] == ["SB", "LB"]
+    sb = rows[0]
+    assert sb["n_seeds"] == 2
+    assert sb["val_acc_mean"] == pytest.approx(0.81)
+    assert sb["val_acc_std"] == pytest.approx(0.01)
+    out = M.format_table1(rows)
+    assert "vs SB" in out
+    # records from a different-scale invocation stay in their own row
+    # instead of being averaged in
+    rows2 = M.table1_view(recs + [{"method": "SB", "batch_size": 32,
+                                   "seed": 0, "steps": 2400,
+                                   "final_acc": 0.9, "train_acc": 0.95}])
+    sb_rows = [r for r in rows2 if r["method"] == "SB"]
+    assert len(sb_rows) == 2
+    assert {r["steps"] for r in sb_rows} == {100, 2400}
+
+
+def test_diffusion_view_refits_stored_series():
+    t = list(range(1, 64))
+    d = [2.0 * np.log(x) + 0.5 for x in t]
+    rec = {"method": "walk", "batch_size": 64, "seed": 0,
+           "metrics": {"distance": [t, d]}}
+    row = M.diffusion_view([rec], burn_in=2)[0]
+    assert row["log_fit"]["slope"] == pytest.approx(2.0, rel=1e-6)
+    assert row["log_fit"]["r2"] > 0.999
+
+
+# ---------------------------------------------------------------------------
+# batch-size-increase schedule
+# ---------------------------------------------------------------------------
+
+
+def test_batch_schedule_growth_and_rounding():
+    sched = BatchSchedule(base_batch=32, max_batch=1024, grow_every=100,
+                          grow_factor=5.0, round_to=16)
+    assert sched.batch_at(0) == 32
+    assert sched.batch_at(99) == 32
+    assert sched.batch_at(100) == 160
+    assert sched.batch_at(200) == 800
+    assert sched.batch_at(300) == 1024          # capped
+    assert all(b % 16 == 0 for b in sched.phases(400))
+    assert sched.phases(400) == [32, 160, 800, 1024]
+
+
+def test_batch_size_increase_maps_decay_regime():
+    small = Regime(base_lr=0.1, total_steps=300, drop_every=100,
+                   drop_factor=0.2)
+    const, sched = batch_size_increase(small, base_batch=32,
+                                       max_batch=1024, round_to=16)
+    assert float(const.lr_at(250)) == pytest.approx(0.1)
+    assert sched.grow_every == 100
+    assert sched.grow_factor == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_runs_skip_on_resume(tmp_path):
+    sweep = SweepSpec(
+        name="tiny", base=_tiny_spec(),
+        methods={"SB": {}, "LB": {"lb.batch_size": 128}})
+    recs = run_sweep(sweep, str(tmp_path))
+    assert len(recs) == 2
+    assert {r["method"] for r in recs} == {"SB", "LB"}
+    assert all(0.0 <= r["final_acc"] <= 1.0 for r in recs)
+    # a checkpoint orphaned by a kill between record append and cleanup
+    # is reaped on the next (skipping) pass
+    orphan = os.path.join(str(tmp_path), "tiny", "ckpt", recs[0]["run_id"])
+    os.makedirs(orphan)
+    seen = []
+    recs2 = run_sweep(sweep, str(tmp_path), log_fn=seen.append)
+    assert [r["run_id"] for r in recs2] == [r["run_id"] for r in recs]
+    assert all("skipping" in line for line in seen)
+    assert not os.path.exists(orphan)
+    # records.jsonl not double-appended
+    store = ResultsStore(os.path.join(str(tmp_path), "tiny"))
+    assert len(store.records()) == 2
+
+
+def test_killed_run_resumes_identically(tmp_path):
+    """The acceptance criterion: kill mid-run, restart, aggregate record
+    matches the uninterrupted run exactly."""
+    spec = _tiny_spec(total_steps=40, eval_every=10)
+    ref = run_one(spec)
+
+    ck = str(tmp_path / "ck")
+    calls = []
+
+    def killer(msg):
+        calls.append(msg)
+        if len(calls) == 2:                     # die after the step-10 eval
+            raise KeyboardInterrupt
+    with pytest.raises(KeyboardInterrupt):
+        run_one(spec, checkpoint_dir=ck, checkpoint_every=8, log_fn=killer)
+    assert os.path.exists(os.path.join(ck, "latest"))
+    resumed = run_one(spec, checkpoint_dir=ck, checkpoint_every=8)
+    for k in ("final_acc", "best_acc", "train_acc", "steps"):
+        assert resumed[k] == ref[k], k
+    assert resumed["metrics"] == ref["metrics"]
+    assert resumed["log_fit"] == ref["log_fit"]
+
+
+def test_killed_sweep_restarts_to_identical_records(tmp_path):
+    """Sweep-level acceptance: a sweep killed mid-run (first run recorded,
+    second run dead with a half-written checkpoint) restarts to the same
+    aggregate records.jsonl as an uninterrupted sweep (modulo wall-clock)."""
+    sweep = SweepSpec(
+        name="killed", base=_tiny_spec(total_steps=24, eval_every=8),
+        methods={"SB": {}, "LB": {"lb.batch_size": 128}})
+
+    def strip(recs):
+        return [{k: v for k, v in r.items() if k != "wall_s"}
+                for r in recs]
+
+    ref = strip(run_sweep(sweep, str(tmp_path / "ref"),
+                          checkpoint_every=10))
+
+    # simulate the kill: complete the SB run only, then die inside the LB
+    # run after its step-10 checkpoint (same layout run_sweep would leave)
+    boom_dir = str(tmp_path / "boom")
+    sb, lb = sweep.expand()
+    sb_only = dataclasses.replace(sweep, methods={"SB": {}})
+    run_sweep(sb_only, boom_dir, checkpoint_every=10)
+
+    def killer(msg):
+        if msg.startswith("step    16"):
+            raise KeyboardInterrupt
+    lb_ck = os.path.join(boom_dir, sweep.name, "ckpt", lb.run_id)
+    with pytest.raises(KeyboardInterrupt):
+        run_one(lb, checkpoint_dir=lb_ck, checkpoint_every=10,
+                log_fn=killer)
+    assert os.path.exists(os.path.join(lb_ck, "latest"))
+
+    resumed = strip(run_sweep(sweep, boom_dir, checkpoint_every=10))
+    assert resumed == ref
+    assert not os.path.exists(lb_ck)            # cleaned up after recording
+
+
+def test_run_determinism_same_seed():
+    spec = _tiny_spec()
+    a, b = run_one(spec), run_one(spec)
+    assert a["final_acc"] == b["final_acc"]
+    assert a["metrics"] == b["metrics"]
+
+
+def test_batch_schedule_run_executes_all_phases(tmp_path):
+    spec = _tiny_spec(
+        total_steps=20, drop_every=8,
+        lb=LargeBatchConfig(batch_size=128, base_batch_size=32,
+                            lr_rule="none", ghost_batch_size=16,
+                            regime_adaptation=False),
+        batch_schedule=BatchSchedule(base_batch=32, max_batch=128,
+                                     grow_every=8, grow_factor=2.0,
+                                     round_to=16))
+    rec = run_one(spec)
+    assert rec["steps"] == 20
+    assert rec["batch_size"] == 32              # reported base batch
+    assert 0.0 <= rec["final_acc"] <= 1.0
+
+
+def test_mesh_compatible_gating():
+    from repro.launch.mesh import make_data_mesh
+    from repro.train.data_parallel import mesh_compatible
+    mesh = make_data_mesh(1)
+    lb = LargeBatchConfig(batch_size=64, base_batch_size=32,
+                          ghost_batch_size=16)
+    assert mesh_compatible(lb, mesh)
+    assert mesh_compatible(lb, mesh, batch_size=48)
+    assert not mesh_compatible(lb, mesh, batch_size=63)
+    # no-GBN runs only need device divisibility
+    nb = dataclasses.replace(lb, use_gbn=False)
+    assert mesh_compatible(nb, mesh, batch_size=63)
+
+
+def test_lm_runner_path(tmp_path):
+    spec = _tiny_spec(
+        lm_arch="qwen3-1.7b", lm_seq_len=16, lm_n_tokens=4096,
+        lm_vocab_size=64, total_steps=4, drop_every=2, eval_every=2,
+        track_diffusion=False, weight_decay=0.0,
+        lb=LargeBatchConfig(batch_size=8, base_batch_size=8,
+                            lr_rule="none", use_gbn=False))
+    sweep = SweepSpec(name="lm", base=spec)
+    recs = run_sweep(sweep, str(tmp_path), checkpoint_every=2)
+    assert len(recs) == 1
+    assert np.isfinite(recs[0]["final_ce"])
+    assert recs[0]["steps"] == 4

@@ -8,6 +8,8 @@ import pytest
 from repro.core.clipping import clip_by_global_norm, global_norm
 from repro.optim import adam, sgd
 
+pytestmark = pytest.mark.tier0
+
 
 def _quad_loss(params):
     return 0.5 * jnp.sum(params["w"] ** 2)
