@@ -105,6 +105,34 @@ def kernel_flash_attention(quick: bool) -> None:
     emit("kernel_flash_pallas_interp", t_ker, f"max_err={err:.1e}")
 
 
+def kernel_attention_grad(quick: bool) -> None:
+    """Flash attention forward+backward (the custom_vjp Pallas pair:
+    lse-residual forward, dq / dkv recomputation kernels) vs autodiff of
+    the jnp oracle — the LM mixer's training hot path."""
+    from repro.kernels import ops, ref
+    B, H, KV, S, hd = (1, 4, 2, 256, 64) if quick else (2, 8, 4, 1024, 64)
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, S, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, KV, S, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, KV, S, hd))
+    w = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, hd))
+
+    def make_loss(f):
+        return lambda a, b, c: (f(a, b, c) * w).sum()
+
+    g_ref = jax.jit(jax.grad(make_loss(
+        lambda a, b, c: ref.attention_ref(a, b, c, causal=True)),
+        argnums=(0, 1, 2)))
+    g_ker = jax.jit(jax.grad(make_loss(
+        lambda a, b, c: ops.flash_attention_hm(a, b, c, causal=True)),
+        argnums=(0, 1, 2)))
+    t_ref = _timeit(lambda: g_ref(q, k, v)[0], reps=3)
+    t_ker = _timeit(lambda: g_ker(q, k, v)[0], reps=3)
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(g_ker(q, k, v), g_ref(q, k, v)))
+    emit("kernel_attention_grad_ref", t_ref, f"S={S}")
+    emit("kernel_attention_grad_pallas_interp", t_ker, f"max_err={err:.1e}")
+
+
 def kernel_mamba(quick: bool) -> None:
     from repro.kernels import ops, ref
     B, c, di, ds = (2, 64, 512, 16) if quick else (4, 256, 1024, 16)
@@ -121,6 +149,37 @@ def kernel_mamba(quick: bool) -> None:
     t_ker = _timeit(f_ker, xc, dt, Bm, Cm, A, h0, reps=3)
     emit("kernel_mamba_ref", t_ref, f"c={c},di={di}")
     emit("kernel_mamba_pallas_interp", t_ker, "")
+
+
+def kernel_mamba_grad(quick: bool) -> None:
+    """Mamba chunk scan forward+backward (the custom_vjp Pallas pair:
+    VMEM-resident forward, reverse-time backward with in-kernel state
+    recompute — no oracle forward replay) vs autodiff of the jnp oracle."""
+    from repro.kernels import ops, ref
+    B, c, di, ds = (2, 64, 512, 16) if quick else (4, 256, 1024, 16)
+    rng = jax.random.PRNGKey(0)
+    xc = jax.random.normal(rng, (B, c, di))
+    dt = 0.1 * jax.nn.softplus(jax.random.normal(rng, (B, c, di)))
+    Bm = jax.random.normal(rng, (B, c, ds))
+    Cm = jax.random.normal(rng, (B, c, ds))
+    A = -jnp.abs(jax.random.normal(rng, (di, ds)))
+    h0 = jnp.zeros((B, di, ds))
+    w = jax.random.normal(jax.random.PRNGKey(1), (B, c, di))
+
+    def make_loss(f):
+        return lambda *a: (f(*a)[0] * w).sum()
+
+    g_ref = jax.jit(jax.grad(make_loss(ref.mamba_chunk_ref),
+                             argnums=(0, 1, 2, 3, 4, 5)))
+    g_ker = jax.jit(jax.grad(make_loss(ops.mamba_chunk),
+                             argnums=(0, 1, 2, 3, 4, 5)))
+    t_ref = _timeit(lambda: g_ref(xc, dt, Bm, Cm, A, h0)[0], reps=3)
+    t_ker = _timeit(lambda: g_ker(xc, dt, Bm, Cm, A, h0)[0], reps=3)
+    err = max(float(jnp.abs(a - b).max())
+              for a, b in zip(g_ker(xc, dt, Bm, Cm, A, h0),
+                              g_ref(xc, dt, Bm, Cm, A, h0)))
+    emit("kernel_mamba_grad_ref", t_ref, f"c={c},di={di}")
+    emit("kernel_mamba_grad_pallas_interp", t_ker, f"max_err={err:.1e}")
 
 
 # ---------------------------------------------------------------------------
@@ -349,7 +408,9 @@ BENCHES: Dict[str, Callable] = {
     "kernel_gbn": kernel_gbn,
     "kernel_gbn_grad": kernel_gbn_grad,
     "kernel_flash_attention": kernel_flash_attention,
+    "kernel_attention_grad": kernel_attention_grad,
     "kernel_mamba": kernel_mamba,
+    "kernel_mamba_grad": kernel_mamba_grad,
     "table1_generalization_gap": table1_generalization_gap,
     "figure1_batch_size_error": figure1_batch_size_error,
     "figure2_weight_distance": figure2_weight_distance,

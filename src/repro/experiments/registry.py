@@ -10,7 +10,9 @@ study from the paper or its related work:
   ("don't decay the learning rate, increase the batch size") against SB and
   the paper's full recipe.
 - ``lm-smoke`` — the recipe on a reduced assigned LM architecture (ghost
-  gradient noise instead of GBN), exercising the LM runner path.
+  gradient noise instead of GBN), exercising the LM runner path through the
+  ``use_kernels=True`` hot path (Pallas flash-attention / Mamba chunk-scan
+  forward+backward kernels).
 
 Factories accept scale overrides so the examples, tests, and benchmarks can
 shrink them (``steps=``, ``seeds=``, ...).
@@ -107,7 +109,8 @@ def lm_smoke(*, steps: int = 30, arch: str = "qwen3-1.7b",
              ) -> SweepSpec:
     """The recipe on a reduced assigned LM arch: SB vs LB with ghost
     gradient noise (the norm-free GBN twin) — a runner smoke, not a paper
-    table."""
+    table. Runs ``use_kernels=True``: training differentiates through the
+    Pallas flash-attention / Mamba chunk-scan custom-VJP pairs."""
     base = RunSpec(
         name="lm-smoke", method="SB", model=_f1_reduced(),
         data=DataSpec(seed=1), lm_arch=arch, lm_seq_len=32,
@@ -115,7 +118,7 @@ def lm_smoke(*, steps: int = 30, arch: str = "qwen3-1.7b",
         lb=LargeBatchConfig(batch_size=8, base_batch_size=8,
                             lr_rule="none", use_gbn=False),
         base_lr=0.02, total_steps=steps, drop_every=max(1, steps // 2),
-        track_diffusion=False, weight_decay=0.0,
+        track_diffusion=False, weight_decay=0.0, use_kernels=True,
         eval_every=max(1, steps // 2))
     del use_mesh  # accepted for CLI uniformity; the LM step has no DP path
     lb_large = LargeBatchConfig(batch_size=32, base_batch_size=8,

@@ -1,26 +1,45 @@
 """Pallas TPU flash attention (streaming softmax), with causal masking,
-sliding-window support and GQA.
+sliding-window support, GQA, and a dedicated Pallas backward.
 
-TPU-native design: the grid is (B, H, n_q_blocks, n_kv_blocks) — TPU iterates
-the last grid axis sequentially per core, so the running max / normalizer /
-accumulator live in VMEM scratch across kv steps and the output block is
-written once on the final kv step. KV blocks that are entirely masked
-(beyond causal frontier or older than the window) are skipped with
-``pl.when``. Block sizes are MXU-aligned (128 multiples); GQA indexes the
-kv head as h // (H // KV) in the BlockSpec index maps, so K/V are never
-materialised per-q-head.
+TPU-native design: the forward grid is (B, H, n_q_blocks, n_kv_blocks) — TPU
+iterates the last grid axis sequentially per core, so the running max /
+normalizer / accumulator live in VMEM scratch across kv steps and the output
+block is written once on the final kv step. KV blocks that are entirely
+masked (beyond causal frontier or older than the window) are skipped with
+``pl.when``. Block sizes are sublane-aligned (rounded up to the dtype's
+sublane multiple — 8 for f32, 16 for bf16 — so ragged ``T``/``S`` produce
+legal BlockSpecs outside interpret mode); GQA indexes the kv head as
+h // (H // KV) in the BlockSpec index maps, so K/V are never materialised
+per-q-head.
+
+Backward: the standard recomputation trick. The forward additionally emits
+the per-row logsumexp ``lse = m + log l`` (the only residual beyond the
+inputs and output), and the backward recomputes the probabilities
+``p = exp(q k^T * scale - lse)`` blockwise instead of storing the (T, S)
+matrix:
+
+- ``_flash_bwd_dq_kernel`` — grid (B, H, n_q, n_kv), kv innermost; dq is
+  accumulated in VMEM scratch across kv steps and written once.
+- ``_flash_bwd_dkv_kernel`` — the transposed grid (B, H, n_kv, n_q), q
+  innermost; dk and dv accumulate in VMEM scratch across q steps. Gradients
+  are produced per q-head; :func:`flash_attention_backward_pallas` sums the
+  GQA cotangents over each q-head group outside the kernel.
+
+Both backward kernels skip non-intersecting (q-block, kv-block) pairs with
+the same visibility test as the forward.
 
 Layout: q (B, H, T, hd); k, v (B, KV, S, hd) — head-major so the sequence
 axis is the penultimate (sublane) dimension of each block.
 
-Public entry: :func:`repro.kernels.ops.flash_attention`.
-Oracle: :func:`repro.kernels.ref.attention_ref`.
+Public entry: :func:`repro.kernels.ops.flash_attention` (differentiable via
+``jax.custom_vjp``). Oracles: :func:`repro.kernels.ref.attention_ref` /
+:func:`repro.kernels.ref.attention_vjp_ref`.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +51,62 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, window: Optional[int],
-                  block_q: int, block_k: int, seq_q: int, seq_k: int):
+def _sublane(dtype) -> int:
+    """Minimum sublane multiple for a block's penultimate axis."""
+    return 16 if jnp.dtype(dtype) == jnp.bfloat16 else 8
+
+
+def _round_up(n: int, mult: int) -> int:
+    return (n + mult - 1) // mult * mult
+
+
+def _block_sizes(T: int, S: int, block_q: int, block_k: int,
+                 dtype) -> Tuple[int, int]:
+    """Sublane-aligned (bq, bk): never larger than the padded sequence, and
+    always a multiple of the dtype's sublane count, so the BlockSpecs are
+    legal on hardware even for ragged ``T``/``S`` (e.g. T=100 -> bq=104,
+    not 100)."""
+    sub = _sublane(dtype)
+    bq = _round_up(min(block_q, max(T, sub)), sub)
+    bk = _round_up(min(block_k, max(S, sub)), sub)
+    return bq, bk
+
+
+def _band_intersects(q_start, k_start, *, causal: bool,
+                     window: Optional[int], block_q: int, block_k: int):
+    """Does this (q-block, kv-block) pair intersect the visible band?
+    Shared by the forward and both backward kernels so they agree on which
+    blocks are skipped."""
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest visible key for the oldest query in the block:
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 > q_start - window)
+    return needed
+
+
+def _visibility_mask(s_shape, q_start, k_start, *, causal: bool,
+                     window: Optional[int], seq_k: int):
+    q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
+    k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 1)
+    mask = k_idx < seq_k
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, seq_k: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -47,15 +119,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     q_start = qi * block_q
     k_start = ki * block_k
-
-    # does this kv block intersect the visible band of this q block?
-    needed = True
-    if causal:
-        needed = k_start <= q_start + block_q - 1
-    if window is not None:
-        # newest visible key for the oldest query in the block:
-        needed = jnp.logical_and(
-            needed, k_start + block_k - 1 > q_start - window)
+    needed = _band_intersects(q_start, k_start, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k)
 
     @pl.when(needed)
     def _compute():
@@ -63,13 +128,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
         s = q @ k.T                                       # (bq, bk)
-        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = k_idx < seq_k
-        if causal:
-            mask &= k_idx <= q_idx
-        if window is not None:
-            mask &= k_idx > q_idx - window
+        mask = _visibility_mask(s.shape, q_start, k_start, causal=causal,
+                                window=window, seq_k=seq_k)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]                               # (bq, 1)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -84,6 +144,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_ref[...] + jnp.log(l)           # (bq, 1)
 
 
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -91,14 +152,21 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            window: Optional[int] = None,
                            block_q: int = DEFAULT_BLOCK_Q,
                            block_k: int = DEFAULT_BLOCK_K,
-                           interpret: bool = False) -> jax.Array:
-    """q: (B, H, T, hd); k, v: (B, KV, S, hd) -> (B, H, T, hd)."""
+                           return_residuals: bool = False,
+                           interpret: bool = False
+                           ) -> Union[jax.Array,
+                                      Tuple[jax.Array, jax.Array]]:
+    """q: (B, H, T, hd); k, v: (B, KV, S, hd) -> (B, H, T, hd).
+
+    ``return_residuals=True`` additionally returns the per-row logsumexp
+    ``lse`` (B, H, T) f32 — the residual the backward pass needs to
+    recompute the probabilities blockwise.
+    """
     B, H, T, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     g = H // KV
-    bq = min(block_q, max(T, 8))
-    bk = min(block_k, max(S, 8))
-    Tp, Sp = (T + bq - 1) // bq * bq, (S + bk - 1) // bk * bk
+    bq, bk = _block_sizes(T, S, block_q, block_k, q.dtype)
+    Tp, Sp = _round_up(T, bq), _round_up(S, bk)
     if Tp != T:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
     if Sp != S:
@@ -106,10 +174,10 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
     grid = (B, H, Tp // bq, Sp // bk)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
-            window=window, block_q=bq, block_k=bk, seq_q=T, seq_k=S),
+            window=window, block_q=bq, block_k=bk, seq_k=S),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -118,9 +186,17 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, 1, bk, hd),
                          lambda b, h, qi, ki: (b, h // g, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, hd),
-                               lambda b, h, qi, ki: (b, h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            # trailing unit axis keeps bq on the SUBLANE axis — a (1,1,bq)
+            # block would put the merely-sublane-aligned bq on the lane
+            # axis, which is illegal off-interpret for ragged T
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, qi, ki: (b, h, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Tp, 1), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq, hd), jnp.float32),   # acc
             pltpu.VMEM((bq, 1), jnp.float32),    # running max
@@ -128,4 +204,184 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
+    if return_residuals:
+        return out[:, :, :T], lse[:, :, :T, 0]
     return out[:, :, :T]
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _recompute_p_ds(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    q_start, k_start, *, scale: float, causal: bool,
+                    window: Optional[int], seq_k: int):
+    """Shared recomputation for both backward kernels: rebuild this block's
+    probabilities from the lse residual and form ``ds = p * (dp - delta)``
+    (the softmax-backward core). Keeping it in one place keeps the dq and
+    dk/dv kernels' masking/scaling in lockstep. Returns (q, k, do, p, ds),
+    all f32."""
+    q = q_ref[0, 0].astype(jnp.float32)                   # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]                                   # (bq, 1)
+    delta = delta_ref[0, 0]                               # (bq, 1)
+    s = (q @ k.T) * scale                                 # (bq, bk)
+    mask = _visibility_mask(s.shape, q_start, k_start, causal=causal,
+                            window=window, seq_k=seq_k)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - lse)
+    dp = do @ v.T                                         # (bq, bk)
+    ds = p * (dp - delta)
+    return q, k, do, p, ds
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, dq_acc, *, scale: float, causal: bool,
+                         window: Optional[int], block_q: int, block_k: int,
+                         seq_k: int):
+    """dq for one q block, accumulated across kv blocks (innermost axis)."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    needed = _band_intersects(q_start, k_start, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k)
+
+    @pl.when(needed)
+    def _compute():
+        _, k, _, _, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, q_start,
+            k_start, scale=scale, causal=causal, window=window, seq_k=seq_k)
+        dq_acc[...] += (ds @ k) * scale
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                          causal: bool, window: Optional[int], block_q: int,
+                          block_k: int, seq_k: int):
+    """Per-q-head dk/dv for one kv block, accumulated across q blocks
+    (innermost axis). GQA groups are summed outside the kernel."""
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    needed = _band_intersects(q_start, k_start, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k)
+
+    @pl.when(needed)
+    def _compute():
+        q, _, do, p, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, q_start,
+            k_start, scale=scale, causal=causal, window=window, seq_k=seq_k)
+        dv_acc[...] += p.T @ do                           # (bk, hd)
+        dk_acc[...] += (ds.T @ q) * scale
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_backward_pallas(
+        q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
+        lse: jax.Array, do: jax.Array, *, causal: bool = True,
+        window: Optional[int] = None, block_q: int = DEFAULT_BLOCK_Q,
+        block_k: int = DEFAULT_BLOCK_K, interpret: bool = False
+        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """VJP of :func:`flash_attention_pallas` w.r.t. (q, k, v).
+
+    q, o, do: (B, H, T, hd); k, v: (B, KV, S, hd); lse: (B, H, T) f32 (the
+    forward's logsumexp residual). Returns (dq, dk, dv) in the input dtypes.
+
+    Standard recomputation backward: ``delta = rowsum(do * o)`` is one cheap
+    elementwise pass outside the kernels; the probability blocks are rebuilt
+    from ``lse`` inside each kernel, so no (T, S)-sized tensor is ever
+    materialised.
+    """
+    B, H, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = _block_sizes(T, S, block_q, block_k, q.dtype)
+    Tp, Sp = _round_up(T, bq), _round_up(S, bk)
+
+    # per-row terms carry a trailing unit axis so bq stays on the sublane
+    # axis of their blocks (see the forward's lse out_spec)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)[..., None]
+    lse = lse[..., None]
+    if Tp != T:
+        pad_t = ((0, 0), (0, 0), (0, Tp - T), (0, 0))
+        q = jnp.pad(q, pad_t)
+        do = jnp.pad(do, pad_t)
+        lse = jnp.pad(lse, pad_t)
+        delta = jnp.pad(delta, pad_t)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+
+    q_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, hd),
+                           lambda b, h, qi, ki: (b, h // g, ki, 0))
+    row_spec = pl.BlockSpec((1, 1, bq, 1), lambda b, h, qi, ki: (b, h, qi, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dq_kernel, scale=scale, causal=causal, window=window,
+            block_q=bq, block_k=bk, seq_k=S),
+        grid=(B, H, Tp // bq, Sp // bk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # transposed grid: kv blocks outer, q blocks innermost so the dk/dv
+    # accumulators persist in VMEM across q steps
+    qT_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, ki, qi: (b, h, qi, 0))
+    kvT_spec = pl.BlockSpec((1, 1, bk, hd),
+                            lambda b, h, ki, qi: (b, h // g, ki, 0))
+    rowT_spec = pl.BlockSpec((1, 1, bq, 1),
+                             lambda b, h, ki, qi: (b, h, qi, 0))
+    dkvT_spec = pl.BlockSpec((1, 1, bk, hd),
+                             lambda b, h, ki, qi: (b, h, ki, 0))
+
+    dkh, dvh = pl.pallas_call(
+        functools.partial(
+            _flash_bwd_dkv_kernel, scale=scale, causal=causal, window=window,
+            block_q=bq, block_k=bk, seq_k=S),
+        grid=(B, H, Sp // bk, Tp // bq),
+        in_specs=[qT_spec, kvT_spec, kvT_spec, qT_spec, rowT_spec, rowT_spec],
+        out_specs=[dkvT_spec, dkvT_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, H, Sp, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, Sp, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                        pltpu.VMEM((bk, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # GQA: sum the per-q-head cotangents over each q-head group
+    dk = dkh.reshape(B, KV, g, Sp, hd).sum(axis=2)[:, :, :S].astype(k.dtype)
+    dv = dvh.reshape(B, KV, g, Sp, hd).sum(axis=2)[:, :, :S].astype(v.dtype)
+    return dq[:, :, :T], dk, dv

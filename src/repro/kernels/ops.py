@@ -4,19 +4,28 @@ On TPU the kernels run compiled; everywhere else (this CPU container) they
 run in ``interpret=True`` mode, which traces the kernel body to regular XLA
 ops — bit-for-bit the same program structure, validated against the
 pure-jnp oracles in :mod:`repro.kernels.ref`.
+
+Every op here is differentiable through a dedicated Pallas backward kernel
+wired up with ``jax.custom_vjp`` (see docs/kernels.md for each op's
+forward/backward contract and residual layout) — ``jax.grad`` through the
+``use_kernels=True`` training paths never falls back to
+autodiff-through-interpret or to an oracle forward replay.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+import warnings
+from typing import Optional, Set, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
+                                           flash_attention_backward_pallas,
+                                           flash_attention_pallas)
 from repro.kernels.gbn import gbn_backward_pallas, gbn_forward_pallas
-from repro.kernels.mamba_scan import mamba_chunk_pallas
+from repro.kernels.mamba_scan import (mamba_chunk_backward_pallas,
+                                      mamba_chunk_pallas)
 
 
 def _interpret() -> bool:
@@ -28,26 +37,60 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool, window: Optional[int],
+                     block_q: int, block_k: int) -> jax.Array:
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=_interpret())
+
+
+def _flash_fwd(q, k, v, causal, window, block_q, block_k):
+    out, lse = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, return_residuals=True, interpret=_interpret())
+    # residuals: the inputs, the output, and the per-row logsumexp — the
+    # backward rebuilds the probability blocks from lse instead of saving
+    # anything (T, S)-sized
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_q, block_k, res, do):
+    q, k, v, out, lse = res
+    return flash_attention_backward_pallas(
+        q, k, v, out, lse, do, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True,
                     window: Optional[int] = None) -> jax.Array:
     """Layout adapter for the model code: q (B, T, H, hd); k, v
-    (B, S, KV, hd) -> (B, T, H, hd). Internally head-major."""
+    (B, S, KV, hd) -> (B, T, H, hd). Internally head-major.
+
+    Differentiable: the backward is the dedicated Pallas kernel pair
+    (:func:`repro.kernels.flash_attention.flash_attention_backward_pallas`)
+    via ``jax.custom_vjp``, validated against
+    :func:`repro.kernels.ref.attention_vjp_ref`.
+    """
     qm = q.swapaxes(1, 2)
     km = k.swapaxes(1, 2)
     vm = v.swapaxes(1, 2)
-    out = flash_attention_pallas(qm, km, vm, causal=causal, window=window,
-                                 interpret=_interpret())
+    out = _flash_attention(qm, km, vm, causal, window,
+                           DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
     return out.swapaxes(1, 2)
 
 
 def flash_attention_hm(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        causal: bool = True, window: Optional[int] = None,
-                       block_q: int = 128, block_k: int = 128) -> jax.Array:
+                       block_q: int = DEFAULT_BLOCK_Q,
+                       block_k: int = DEFAULT_BLOCK_K) -> jax.Array:
     """Head-major entry (B, H, T, hd) matching the oracle layout."""
-    return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                  block_q=block_q, block_k=block_k,
-                                  interpret=_interpret())
+    return _flash_attention(q, k, v, causal, window, block_q, block_k)
 
 
 # ---------------------------------------------------------------------------
@@ -95,33 +138,86 @@ def gbn_forward(xg: jax.Array, gamma: jax.Array, beta: jax.Array, *,
 # mamba chunk scan
 # ---------------------------------------------------------------------------
 
+# d_inner values we already warned about (one warning per distinct shape,
+# not per trace): sub-lane-aligned fallback tiles and oracle fallbacks
+_TILE_WARNED: Set[Tuple[int, str]] = set()
+
+
+def _warn_once(di: int, kind: str, msg: str) -> None:
+    if (di, kind) not in _TILE_WARNED:
+        _TILE_WARNED.add((di, kind))
+        warnings.warn(msg, stacklevel=3)
+
+
+# largest whole-axis (untiled) d_inner the kernel will take when no
+# lane-aligned strict tile exists — bounds the VMEM block size
+_MAX_UNTILED_DI = 1024
+
+
+def _mamba_tile(di: int) -> Optional[int]:
+    """Largest 128-multiple tile (<= 512) that divides d_inner, else the
+    whole axis untiled.
+
+    d_inner sits on the LANE axis of the x/dt blocks (and the sublane axis
+    of the state blocks), so a strict sub-tile must be a 128-multiple to be
+    legal off-interpret — when ``di % 128 != 0`` the only aligned option is
+    the whole-axis block (Mosaic pads partial lanes of an untiled axis),
+    which we take up to a VMEM bound. Returns None past that bound — the
+    caller falls back to the jnp oracle. Both degraded paths warn once per
+    shape so kernel-coverage regressions are visible instead of silent.
+    """
+    for cand in (512, 384, 256, 128):
+        if di % cand == 0:
+            return cand
+    if di <= _MAX_UNTILED_DI:
+        _warn_once(
+            di, "untiled",
+            f"mamba_chunk: d_inner={di} has no 128-multiple divisor; "
+            f"running the whole axis as one untiled block (padded lanes, "
+            f"larger VMEM working set)")
+        return di
+    _warn_once(
+        di, "oracle",
+        f"mamba_chunk: d_inner={di} has no 128-multiple divisor and is "
+        f"too large for an untiled block; falling back to the un-tiled "
+        f"jnp oracle (no kernel coverage)")
+    return None
+
 
 @jax.custom_vjp
 def mamba_chunk(xc: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
                 A: jax.Array, h0: jax.Array
                 ) -> Tuple[jax.Array, jax.Array]:
     """Pallas chunk scan with a custom VJP: the forward runs the
-    VMEM-resident kernel; the backward differentiates the pure-jnp oracle
-    (a dedicated backward kernel is future work — the forward already
-    removes the (B, c, d_inner, d_state) HBM round-trips that dominate,
-    see EXPERIMENTS.md §Perf P2)."""
-    di = xc.shape[-1]
-    # pick the largest 128-multiple tile that divides d_inner (<= 512)
-    for cand in (512, 256, 128):
-        if di % cand == 0:
-            return mamba_chunk_pallas(xc, dt, Bm, Cm, A, h0, di_tile=cand,
-                                      interpret=_interpret())
-    return ref.mamba_chunk_ref(xc, dt, Bm, Cm, A, h0)
+    VMEM-resident kernel and the backward runs the dedicated reverse-time
+    kernel (:func:`repro.kernels.mamba_scan.mamba_chunk_backward_pallas`) —
+    no oracle forward replay; the chunk states are recomputed in VMEM
+    scratch inside the backward kernel. Validated against
+    :func:`repro.kernels.ref.mamba_chunk_vjp_ref`.
+    """
+    dit = _mamba_tile(xc.shape[-1])
+    if dit is None:
+        return ref.mamba_chunk_ref(xc, dt, Bm, Cm, A, h0)
+    return mamba_chunk_pallas(xc, dt, Bm, Cm, A, h0, di_tile=dit,
+                              interpret=_interpret())
 
 
 def _mamba_chunk_fwd(xc, dt, Bm, Cm, A, h0):
     out = mamba_chunk(xc, dt, Bm, Cm, A, h0)
+    # residuals: the inputs only — the backward kernel recomputes the state
+    # trajectory per chunk in VMEM, so nothing (B, c, di, ds)-sized is saved
     return out, (xc, dt, Bm, Cm, A, h0)
 
 
 def _mamba_chunk_bwd(res, cts):
-    _, vjp = jax.vjp(ref.mamba_chunk_ref, *res)
-    return vjp(cts)
+    xc, dt, Bm, Cm, A, h0 = res
+    dit = _mamba_tile(xc.shape[-1])
+    if dit is None:
+        # the forward used the oracle; mirror it (shape-static decision)
+        return ref.mamba_chunk_vjp_ref(xc, dt, Bm, Cm, A, h0, cts)
+    dy, dh_last = cts
+    return mamba_chunk_backward_pallas(xc, dt, Bm, Cm, A, h0, dy, dh_last,
+                                       di_tile=dit, interpret=_interpret())
 
 
 mamba_chunk.defvjp(_mamba_chunk_fwd, _mamba_chunk_bwd)

@@ -42,6 +42,51 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.reshape(B, H, T, hd)
 
 
+def attention_vjp_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      do: jax.Array, *, causal: bool = True,
+                      window: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Hand-derived pure-jnp VJP of :func:`attention_ref` w.r.t. (q, k, v).
+
+    q, do: (B, H, T, hd); k, v: (B, KV, S, hd). Returns (dq, dk, dv) in the
+    input dtypes (dk/dv summed over each GQA q-head group).
+
+    Standard softmax-attention backward (f32 throughout): with
+    ``p = softmax(q k^T / sqrt(hd))`` and ``delta = rowsum(do * o)``,
+
+        dv = p^T do
+        ds = p * (do v^T - delta) / sqrt(hd)
+        dq = ds k,   dk = ds^T q
+    """
+    B, H, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.astype(jnp.float32).reshape(B, KV, g, T, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dog = do.astype(jnp.float32).reshape(B, KV, g, T, hd)
+
+    logits = jnp.einsum("bkgtd,bksd->bkgts", qg, kf) * scale
+    qi = jnp.arange(T)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)                  # (B, KV, g, T, S)
+
+    dv = jnp.einsum("bkgts,bkgtd->bksd", p, dog)
+    dp = jnp.einsum("bkgtd,bksd->bkgts", dog, vf)
+    delta = jnp.sum(p * dp, axis=-1, keepdims=True)      # rowsum(do * o)
+    ds = p * (dp - delta) * scale
+    dq = jnp.einsum("bkgts,bksd->bkgtd", ds, kf).reshape(B, H, T, hd)
+    dk = jnp.einsum("bkgts,bkgtd->bksd", ds, qg)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
 # ---------------------------------------------------------------------------
 # ghost batch norm oracle
 # ---------------------------------------------------------------------------
@@ -130,3 +175,17 @@ def mamba_chunk_ref(xc: jax.Array, dt: jax.Array, Bm: jax.Array,
             Bm.swapaxes(0, 1), Cm.swapaxes(0, 1))
     h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), inps)
     return ys.swapaxes(0, 1), h_last
+
+
+def mamba_chunk_vjp_ref(xc: jax.Array, dt: jax.Array, Bm: jax.Array,
+                        Cm: jax.Array, A: jax.Array, h0: jax.Array,
+                        cts: Tuple[jax.Array, jax.Array]
+                        ) -> Tuple[jax.Array, ...]:
+    """Oracle VJP of :func:`mamba_chunk_ref` w.r.t. all six inputs.
+
+    ``cts = (dy, dh_last)`` are the cotangents of the two forward outputs.
+    Returns (dxc, ddt, dB, dC, dA, dh0). Autodiff of the jnp oracle — the
+    dedicated backward kernel is validated against this.
+    """
+    _, vjp = jax.vjp(mamba_chunk_ref, xc, dt, Bm, Cm, A, h0)
+    return vjp(cts)

@@ -7,6 +7,12 @@ carrying the (B, d_inner, d_state) hidden state, with a parallel
 S / chunk — the TPU-native adaptation of the CUDA selective-scan kernel
 (see also kernels/mamba_scan.py for the Pallas version of the inner chunk).
 
+``use_kernels=True`` swaps the inner chunk for the Pallas kernel pair
+(:func:`repro.kernels.ops.mamba_chunk`): the forward keeps the state tile
+resident in VMEM and the backward is the dedicated reverse-time kernel via
+``jax.custom_vjp`` — training through this path never replays the jnp
+oracle's forward scan.
+
 Decode is the O(1)-per-token recurrence with a ring conv state.
 """
 from __future__ import annotations

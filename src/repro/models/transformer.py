@@ -6,6 +6,11 @@ memory) + LM head. Covers all six assigned families:
 - encdec (audio): ``encode`` runs the transformer encoder over the stubbed
   frame embeddings; the decoder cross-attends the encoded memory.
 - vlm: the decoder cross-attends the stubbed projected patch embeddings.
+
+``use_kernels=True`` on the forward/loss entry points routes the mixers
+through the differentiable Pallas kernels (flash attention with its
+dedicated backward pair, the Mamba chunk scan likewise) — the LM train
+step's hot path under the paper's "train longer" regime.
 """
 from __future__ import annotations
 

@@ -60,9 +60,19 @@ def generate(params: Params, cfg: ModelConfig, prompts: jax.Array, *,
              max_new_tokens: int = 32, max_len: Optional[int] = None,
              memory: Optional[jax.Array] = None,
              use_kernels: bool = False) -> jax.Array:
-    """Greedy generation. prompts: (B, P) -> (B, P + max_new_tokens)."""
+    """Greedy generation. prompts: (B, P) -> (B, P + max_new_tokens).
+
+    ``max_len`` (when given) is the cache depth and must cover the prompt
+    plus every new token — a shallower cache would silently write decode
+    steps past the cache depth and corrupt it, so it raises instead.
+    """
     B, P = prompts.shape
     total = max_len or (P + max_new_tokens)
+    if total < P + max_new_tokens:
+        raise ValueError(
+            f"max_len={total} is shallower than prompt ({P}) + "
+            f"max_new_tokens ({max_new_tokens}) = {P + max_new_tokens}; "
+            f"decode steps would write past the cache depth")
     mem_len = memory.shape[1] if memory is not None else 0
     cache = T.init_cache(cfg, B, total, memory_len=mem_len,
                          dtype=jnp.dtype(cfg.dtype))

@@ -40,7 +40,15 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
                        remat: bool = False,
                        seq_parallel: bool = False,
                        ce_chunk: int = 0) -> Callable:
-    """Build the jit-able LM train step implementing the paper's recipe."""
+    """Build the jit-able LM train step implementing the paper's recipe.
+
+    ``use_kernels=True`` routes both LM mixers through the Pallas kernels —
+    flash attention and the Mamba chunk scan — which are fully trainable:
+    each pairs its forward with a dedicated Pallas backward kernel via
+    ``jax.custom_vjp`` (see docs/kernels.md), so ``jax.value_and_grad`` here
+    never differentiates through an interpreted kernel body or replays an
+    oracle forward.
+    """
     sigma = lb.effective_noise_sigma()
 
     def train_step(params: Params, opt_state: sgd.SGDState,
@@ -326,6 +334,8 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
     deterministic shuffling, and checkpoint/resume contract.
 
     ``holdout`` rows from the end are held out for CE evaluation.
+    ``use_kernels=True`` (what the ``lm-smoke`` sweep runs) trains through
+    the differentiable Pallas flash-attention and Mamba chunk-scan kernels.
     """
     init_key, noise_key, shuffle_key = jax.random.split(
         jax.random.PRNGKey(seed), 3)

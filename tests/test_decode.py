@@ -73,6 +73,21 @@ def test_swa_ring_cache_equals_full_mask():
         assert err < 5e-4, (t, err)
 
 
+def test_generate_rejects_shallow_cache():
+    """max_len < prompt + max_new_tokens would silently write decode steps
+    past the cache depth — it must raise instead of corrupting the cache."""
+    import pytest
+    cfg = _cfg("qwen3-1.7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                 cfg.vocab_size)
+    with pytest.raises(ValueError, match="cache depth"):
+        generate(params, cfg, prompts, max_new_tokens=8, max_len=10)
+    # exactly-deep cache is fine
+    out = generate(params, cfg, prompts, max_new_tokens=4, max_len=10)
+    assert out.shape == (2, 10)
+
+
 def test_generate_greedy_deterministic():
     cfg = _cfg("qwen3-1.7b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
