@@ -327,6 +327,75 @@ def lm_train_step(quick: bool) -> None:
     emit("lm_train_step_reduced", us, f"tok_per_s={toks / (us / 1e6):.0f}")
 
 
+def mesh_lm_train_step(quick: bool) -> None:
+    """The unified 2-D train step (train/parallel.py) vs the plain LM step
+    on the degenerate host mesh — the shard_map-layer tax (size-1 psums,
+    manual EP dispatch, corrected grad-clip norm) the sharded trajectory
+    starts from. Run on an MoE config so the manual dispatch is on the
+    timed path."""
+    from repro.configs.registry import get_config
+    from repro.core import LargeBatchConfig, Regime
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as T
+    from repro.optim import sgd
+    from repro.train.trainer import make_lm_train_step
+    cfg = dataclasses.replace(get_config("kimi-k2-1t-a32b").reduced(),
+                              dtype="float32")
+    B, S = (4, 64) if quick else (8, 128)
+    lb = LargeBatchConfig(batch_size=B, base_batch_size=B, grad_clip=1.0)
+    regime = Regime(base_lr=0.01, total_steps=100, drop_every=100)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = sgd.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    plain = jax.jit(make_lm_train_step(cfg, lb, regime))
+    mesh = jax.jit(make_lm_train_step(cfg, lb, regime,
+                                      mesh=make_host_mesh(), params=params))
+    t_plain = _timeit(lambda: plain(params, opt, batch, jnp.int32(0),
+                                    jax.random.PRNGKey(0))[2]["loss"],
+                      reps=3)
+    t_mesh = _timeit(lambda: mesh(params, opt, batch, jnp.int32(0),
+                                  jax.random.PRNGKey(0))[2]["loss"], reps=3)
+    emit("mesh_lm_train_step_plain", t_plain, f"B={B},S={S}")
+    emit("mesh_lm_train_step", t_mesh,
+         f"overhead={(t_mesh - t_plain) / t_plain * 100:.1f}%")
+
+
+def ep_dispatch_2d(quick: bool) -> None:
+    """Manual expert-parallel dispatch (shard_map region + combine psum,
+    expert_parallel.ep_manual_combine) vs the local scatter/gather fallback
+    for the same MoE layer on the host mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.registry import get_config
+    from repro.core import expert_parallel as EP
+    from repro.core.compat import shard_map
+    from repro.launch.mesh import dp_axes, make_host_mesh
+    from repro.models import moe as MOE
+    cfg = dataclasses.replace(get_config("kimi-k2-1t-a32b").reduced(),
+                              dtype="float32")
+    B, S = (2, 64) if quick else (4, 256)
+    params = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    f_local = jax.jit(lambda p, a: MOE.moe_apply(p, cfg, a)[0])
+    mesh = make_host_mesh()
+
+    def local(p, a):
+        with EP.manual_mode("model", mesh.shape["model"], dp_axes(mesh)):
+            return MOE.moe_apply(p, cfg, a)[0]
+
+    rep = jax.tree.map(lambda _: P(), params)
+    f_manual = jax.jit(shard_map(local, mesh=mesh,
+                                 in_specs=(rep, P("data")),
+                                 out_specs=P("data"), check_vma=False))
+    t_local = _timeit(f_local, params, x, reps=3)
+    t_manual = _timeit(f_manual, params, x, reps=3)
+    err = float(jnp.abs(f_local(params, x) - f_manual(params, x)).max())
+    emit("ep_dispatch_local", t_local,
+         f"B={B},S={S},E={cfg.moe.n_experts}")
+    emit("ep_dispatch_2d", t_manual, f"max_err={err:.1e}")
+
+
 def serve_decode_step(quick: bool) -> None:
     from repro.configs.registry import get_config
     from repro.models import transformer as T
@@ -416,6 +485,8 @@ BENCHES: Dict[str, Callable] = {
     "figure2_weight_distance": figure2_weight_distance,
     "appendixB_random_potential": appendixB_random_potential,
     "lm_train_step": lm_train_step,
+    "mesh_lm_train_step": mesh_lm_train_step,
+    "ep_dispatch_2d": ep_dispatch_2d,
     "serve_decode_step": serve_decode_step,
     "sweep_runner_overhead": sweep_runner_overhead,
     "roofline_from_dryrun": roofline_from_dryrun,

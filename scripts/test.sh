@@ -3,8 +3,15 @@
 # collection pass first so import regressions (like the jax shard_map move)
 # fail loudly on their own, before any test runs.
 #
+# The bare full run executes as TWO concurrent file batches: the two
+# heaviest files (test_decode ~8 min; test_parallel_2d's 4-device
+# subprocess equivalence suite) anchor batch A while every other file runs
+# alongside in batch B — roughly halving wall clock without oversubscribing
+# the box. Any explicit pytest args fall back to a single serial
+# invocation.
+#
 # Usage:
-#   scripts/test.sh              # full tier-1 suite (~20 min)
+#   scripts/test.sh              # full tier-1 suite, 2 concurrent batches
 #   scripts/test.sh --quick      # tier-0 quick gate (seconds-scale subset)
 #   scripts/test.sh -m tier1     # just the tier1-marked core subset
 #   scripts/test.sh tests/test_kernels.py -k gbn   # any pytest args
@@ -25,4 +32,28 @@ echo "== collect =="
 python -m pytest --collect-only -q >/dev/null
 
 echo "== run =="
-exec python -m pytest -x -q "${args[@]+"${args[@]}"}"
+if [[ ${#args[@]} -eq 0 ]]; then
+  batch_a=(tests/test_decode.py tests/test_parallel_2d.py)
+  batch_b=()
+  for f in tests/test_*.py; do
+    case " ${batch_a[*]} " in
+      *" $f "*) ;;
+      *) batch_b+=("$f") ;;
+    esac
+  done
+  log_a=$(mktemp) log_b=$(mktemp)
+  trap 'rm -f "$log_a" "$log_b"' EXIT
+  python -m pytest -x -q "${batch_a[@]}" >"$log_a" 2>&1 &
+  pid_a=$!
+  python -m pytest -x -q "${batch_b[@]}" >"$log_b" 2>&1 &
+  pid_b=$!
+  rc=0
+  wait "$pid_a" || rc=$?
+  wait "$pid_b" || rc=$?
+  echo "== batch A (${batch_a[*]}) =="
+  cat "$log_a"
+  echo "== batch B (${#batch_b[@]} files) =="
+  cat "$log_b"
+  exit "$rc"
+fi
+exec python -m pytest -x -q "${args[@]}"

@@ -2,7 +2,7 @@
 or normalize the gradients to prevent divergence")."""
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,10 +14,17 @@ def global_norm(tree: Any) -> jax.Array:
                         for l in leaves))
 
 
-def clip_by_global_norm(grads: Any, max_norm: float
+def clip_by_global_norm(grads: Any, max_norm: float, *,
+                        norm: Optional[jax.Array] = None
                         ) -> Tuple[Any, jax.Array]:
-    """Returns (clipped grads, pre-clip global norm)."""
-    norm = global_norm(grads)
+    """Returns (clipped grads, pre-clip global norm).
+
+    ``norm`` overrides the local computation — the sharded train step
+    (:mod:`repro.train.parallel`) passes the collective-corrected global
+    norm, since leaves sharded over the model axis contribute only their
+    local slice here."""
+    if norm is None:
+        norm = global_norm(grads)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
                                    ).astype(g.dtype), grads), norm

@@ -82,7 +82,11 @@ class DiffusionTracker:
     """
 
     def __init__(self, params0: Any):
-        self.params0 = jax.tree.map(lambda a: a.astype(jnp.float32), params0)
+        # a real copy, not an alias: same-dtype astype is a no-op, and an
+        # aliased w_0 would be deleted under it by donated train steps
+        # (launch.train donates params into the jitted step)
+        self.params0 = jax.tree.map(
+            lambda a: jnp.array(a, dtype=jnp.float32, copy=True), params0)
         self.steps: List[int] = []
         self._pending: List[jax.Array] = []   # device scalars, not yet synced
         self._host: List[float] = []

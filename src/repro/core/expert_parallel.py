@@ -23,16 +23,36 @@ echoes the paper's own observation that per-device batch statistics — their
 
 Routing (top-k, capacity slots) happens OUTSIDE in the global view — it is
 purely data-parallel bookkeeping.
+
+Two entry points share the local math:
+
+- :func:`ep_dispatch_combine` — the pjit-context path: a self-contained
+  shard_map over the ambient mesh (global arrays in, global arrays out).
+- :func:`ep_manual_combine` — the already-manual path: called INSIDE an
+  enclosing shard_map region (the unified train step,
+  :mod:`repro.train.parallel`), where the expert weights arrive pre-sliced
+  and only the psum crosses the wire.
+
+Differentiability: manual collectives do not transpose the way replicated
+global math does, so the expert region is fenced by an adjoint pair —
+:func:`region_in` (identity forward / psum backward) on every replicated
+tensor entering the partial computation, and :func:`region_out` (psum
+forward / identity backward) on the combine. With the fence, gradients of
+both the sharded expert weights and every replicated upstream parameter
+match the single-device step exactly (tested in tests/test_parallel_2d.py).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from contextlib import contextmanager
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
+from repro.launch.mesh import dp_spec_entry
 
 from repro.configs.base import MoEConfig
 
@@ -47,11 +67,180 @@ def ep_applicable(m: MoEConfig, mesh, batch: int, batch_axis: int) -> bool:
     return m.n_experts % mesh.shape["model"] == 0
 
 
-def _dp_axes(mesh):
-    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    if not axes:
+# ---------------------------------------------------------------------------
+# manual-region context (set while tracing a shard_map body)
+# ---------------------------------------------------------------------------
+
+_MANUAL: List[Tuple[Optional[str], int, Tuple[str, ...]]] = []
+
+
+@contextmanager
+def manual_mode(model_axis: Optional[str], model_size: int = 1,
+                dp: Tuple[str, ...] = ()):
+    """Trace-time marker: "we are inside a shard_map region whose mesh has
+    ``model_axis`` of ``model_size`` and data axes ``dp``". The MoE layer
+    (:func:`repro.models.moe.moe_apply`) checks it to route dispatch through
+    :func:`ep_manual_combine` instead of the pjit/global paths."""
+    _MANUAL.append((model_axis, model_size, tuple(dp)))
+    try:
+        yield
+    finally:
+        _MANUAL.pop()
+
+
+def manual_state() -> Optional[Tuple[Optional[str], int, Tuple[str, ...]]]:
+    return _MANUAL[-1] if _MANUAL else None
+
+
+def manual_shard_mode(m: MoEConfig, params: Params) -> Optional[str]:
+    """How the expert weights handed to this manual region are sliced:
+    "expert" (E/msize local experts), "ffn" (full E, d_expert/msize hidden),
+    or None (replicated — caller should use the plain local path). Inferred
+    from the actual leaf shapes so it always agrees with what the spec
+    builder (:func:`repro.train.parallel.mesh_param_specs`) produced."""
+    st = manual_state()
+    if st is None or st[0] is None:
         return None
-    return axes if len(axes) > 1 else axes[0]
+    msize = st[1]
+    E_loc, _, f_loc = params["w_gate"].shape
+    if E_loc * msize == m.n_experts:
+        return "expert"
+    if E_loc == m.n_experts and f_loc * msize == m.d_expert:
+        return "ffn"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# adjoint fence around the partial-sum region
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def region_in(x: jax.Array, axis) -> jax.Array:
+    """Identity forward / psum(``axis``) backward. Wraps every replicated
+    differentiable tensor entering the expert-partial computation: each
+    shard's cotangent covers only its local experts, and the psum restores
+    the full (replicated) gradient."""
+    return x
+
+
+def _region_in_fwd(x, axis):
+    return x, None
+
+
+def _region_in_bwd(axis, _, g):
+    return (jax.lax.psum(g, axis),)
+
+
+region_in.defvjp(_region_in_fwd, _region_in_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def region_out(y: jax.Array, axis) -> jax.Array:
+    """psum(``axis``) forward / identity backward — the combine. The output
+    cotangent is replicated (downstream math is replicated over the model
+    axis), and each shard's partial wants exactly that cotangent."""
+    return jax.lax.psum(y, axis)
+
+
+def _region_out_fwd(y, axis):
+    return jax.lax.psum(y, axis), None
+
+
+def _region_out_bwd(axis, _, g):
+    return (g,)
+
+
+region_out.defvjp(_region_out_fwd, _region_out_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def mean_in_fwd(x: jax.Array, axes) -> jax.Array:
+    """pmean(``axes``) forward / identity backward.
+
+    For batch-statistics losses that are NON-linear in per-shard means (the
+    router load-balance loss ``E * sum_e f_e * P_e``): the forward pmean
+    makes the loss value the global one, and the identity backward leaves
+    each shard's per-token cotangent UNSCALED — so after the step's final
+    gradient pmean over the dp axes, each token's contribution lands exactly
+    once. (A plain pmean here would transpose into a second 1/n.)"""
+    return jax.lax.pmean(x, axes)
+
+
+def _mean_in_fwd_fwd(x, axes):
+    return jax.lax.pmean(x, axes), None
+
+
+def _mean_in_fwd_bwd(axes, _, g):
+    return (g,)
+
+
+mean_in_fwd.defvjp(_mean_in_fwd_fwd, _mean_in_fwd_bwd)
+
+
+# ---------------------------------------------------------------------------
+# the shared per-shard dispatch -> expert FF -> combine
+# ---------------------------------------------------------------------------
+
+
+def _local_combine(xb: jax.Array, tib: jax.Array, twb: jax.Array,
+                   slb: jax.Array, kpb: jax.Array, wg: jax.Array,
+                   wu: jax.Array, wd: jax.Array, *, m: MoEConfig, C: int,
+                   axis: str, mode: str) -> jax.Array:
+    """One shard's scatter -> expert SwiGLU -> gather -> psum combine.
+
+    xb: (Bl, S, d) tokens (replicated over ``axis``); tib/twb/slb/kpb:
+    (Bl, S, k) routing bookkeeping (likewise replicated); wg/wu/wd: the
+    LOCAL expert-weight slice — (E/msize, d, f) in "expert" mode, or
+    (E, d, f/msize) / (E, f/msize, d) in "ffn" mode.
+    """
+    dt = xb.dtype
+    Bl, S, k = tib.shape
+    d = xb.shape[-1]
+    xb = region_in(xb, axis)
+    twb = region_in(twb, axis)
+    if mode == "expert":
+        E_loc = wg.shape[0]
+        lo = jax.lax.axis_index(axis) * E_loc
+        local = (tib >= lo) & (tib < lo + E_loc) & kpb     # (Bl, S, k)
+        e_loc = jnp.where(local, tib - lo, 0)
+    else:                                                  # "ffn"
+        E_loc = wg.shape[0]
+        local = kpb
+        e_loc = tib
+    s_idx = jnp.where(local, slb, 0)
+    b_idx = jnp.broadcast_to(jnp.arange(Bl)[:, None], (Bl, S)).reshape(-1)
+    # scatter one k-assignment at a time: peak extra memory is one
+    # (Bl, S, d) masked copy, not the (Bl, S, k, d) broadcast.
+    buf = jnp.zeros((Bl, E_loc, C, d), dtype=dt)
+    for j in range(k):
+        xj = xb * local[:, :, j, None].astype(dt)
+        buf = buf.at[b_idx, e_loc[:, :, j].reshape(-1),
+                     s_idx[:, :, j].reshape(-1)].add(
+            xj.reshape(-1, d), mode="drop")
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg.astype(dt)))
+    u = jnp.einsum("becd,edf->becf", buf, wu.astype(dt))
+    y_buf = jnp.einsum("becf,efd->becd", g * u, wd.astype(dt))
+    y = jnp.zeros((Bl, S, d), dtype=dt)
+    for j in range(k):
+        yj = y_buf[b_idx, e_loc[:, :, j].reshape(-1),
+                   s_idx[:, :, j].reshape(-1)].reshape(Bl, S, d)
+        y = y + yj * (twb[:, :, j].astype(dt)
+                      * local[:, :, j].astype(dt))[..., None]
+    return region_out(y, axis)
+
+
+def ep_manual_combine(params: Params, m: MoEConfig, x: jax.Array,
+                      topi: jax.Array, topw: jax.Array, slot: jax.Array,
+                      keep: jax.Array, C: int, *, axis: str,
+                      mode: str) -> jax.Array:
+    """Dispatch+combine for callers ALREADY inside a shard_map region: the
+    expert weights in ``params`` are the local slices (see
+    :func:`manual_shard_mode`), all token tensors are model-replicated, and
+    the single collective is the combine psum over ``axis``."""
+    return _local_combine(x, topi, topw, slot, keep, params["w_gate"],
+                          params["w_up"], params["w_down"], m=m, C=C,
+                          axis=axis, mode=mode)
 
 
 def ep_dispatch_combine(params: Params, m: MoEConfig, x: jax.Array,
@@ -61,9 +250,7 @@ def ep_dispatch_combine(params: Params, m: MoEConfig, x: jax.Array,
     """x: (B, S, d); topi/topw/slot/keep: (B, S, k). ``batch_axis`` marks
     which of the two leading dims carries the data-sharded batch (0 normally;
     1 for decode, where the batch was folded into the token axis)."""
-    msize = mesh.shape["model"]
-    E_loc = m.n_experts // msize
-    dp = _dp_axes(mesh)
+    dp = dp_spec_entry(mesh)
     nb = x.shape[batch_axis]
     dpsize = 1
     if dp is not None:
@@ -75,35 +262,9 @@ def ep_dispatch_combine(params: Params, m: MoEConfig, x: jax.Array,
     sp3[batch_axis] = dp
     tok_spec = P(*sp3)
 
-    dt = x.dtype
-
     def local_fn(xb, tib, twb, slb, kpb, wg, wu, wd):
-        midx = jax.lax.axis_index("model")
-        lo = midx * E_loc
-        local = (tib >= lo) & (tib < lo + E_loc) & kpb       # (Bl, S, k)
-        Bl, S, k = tib.shape
-        d = xb.shape[-1]
-        e_loc = jnp.where(local, tib - lo, 0)
-        s_idx = jnp.where(local, slb, 0)
-        b_idx = jnp.broadcast_to(jnp.arange(Bl)[:, None], (Bl, S)).reshape(-1)
-        # scatter one k-assignment at a time: peak extra memory is one
-        # (Bl, S, d) masked copy, not the (Bl, S, k, d) broadcast.
-        buf = jnp.zeros((Bl, E_loc, C, d), dtype=dt)
-        for j in range(k):
-            xj = xb * local[:, :, j, None].astype(dt)
-            buf = buf.at[b_idx, e_loc[:, :, j].reshape(-1),
-                         s_idx[:, :, j].reshape(-1)].add(
-                xj.reshape(-1, d), mode="drop")
-        g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, wg[0].astype(dt)))
-        u = jnp.einsum("becd,edf->becf", buf, wu[0].astype(dt))
-        y_buf = jnp.einsum("becf,efd->becd", g * u, wd[0].astype(dt))
-        y = jnp.zeros((Bl, S, d), dtype=dt)
-        for j in range(k):
-            yj = y_buf[b_idx, e_loc[:, :, j].reshape(-1),
-                       s_idx[:, :, j].reshape(-1)].reshape(Bl, S, d)
-            y = y + yj * (twb[:, :, j].astype(dt)
-                          * local[:, :, j].astype(dt))[..., None]
-        return jax.lax.psum(y, "model")
+        return _local_combine(xb, tib, twb, slb, kpb, wg[0], wu[0], wd[0],
+                              m=m, C=C, axis="model", mode="expert")
 
     # expert weights carry a leading dummy axis so the sharded E dim stays
     # explicit: (1, E, d, f) sharded on dim1.

@@ -4,7 +4,7 @@
     PYTHONPATH=src python -m repro.experiments.cli show <sweep>
     PYTHONPATH=src python -m repro.experiments.cli run <sweep> \
         [--out experiments/runs] [--steps N] [--seeds K] \
-        [--checkpoint-every N] [--fresh] [--mesh]
+        [--checkpoint-every N] [--fresh] [--mesh [data|2d]]
     PYTHONPATH=src python -m repro.experiments.cli table <sweep> \
         [--out experiments/runs] [--burn-in N]
 
@@ -28,7 +28,7 @@ def _sweep_overrides(args) -> dict:
     if args.seeds:
         kw["seeds"] = tuple(range(args.seeds))
     if args.mesh:
-        kw["use_mesh"] = True
+        kw["use_mesh"] = args.mesh   # "data" (1-D) or "2d" (data x model)
     return kw
 
 
@@ -93,8 +93,11 @@ def main(argv=None) -> None:
         p.add_argument("--steps", type=int, default=0)
         p.add_argument("--seeds", type=int, default=0,
                        help="number of seeds (0..K-1)")
-        p.add_argument("--mesh", action="store_true",
-                       help="fan runs over the ('data',) mesh when usable")
+        p.add_argument("--mesh", nargs="?", const="data", default="",
+                       choices=["data", "2d"],
+                       help="fan runs over a mesh when usable: 'data' "
+                            "(1-D, the default when the flag is bare) or "
+                            "'2d' (data x model)")
 
     p = sub.add_parser("show")
     _common(p)

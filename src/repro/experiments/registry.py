@@ -48,7 +48,7 @@ def _gap_base(steps: int, *, track_diffusion: bool = True) -> RunSpec:
 def generalization_gap(*, steps: int = 2400, large_batch: int = 1024,
                        small_batch: int = 32, ghost: int = 16,
                        seeds: Sequence[int] = (0,),
-                       use_mesh: bool = False) -> SweepSpec:
+                       use_mesh=False) -> SweepSpec:
     """Table 1: the five method columns on the reduced F1 task."""
     cols = presets(large_batch, small_batch, ghost=ghost)
     base = dataclasses.replace(_gap_base(steps), use_mesh=use_mesh)
@@ -59,7 +59,7 @@ def generalization_gap(*, steps: int = 2400, large_batch: int = 1024,
 
 
 def diffusion(*, steps: int = 400, batches: Sequence[int] = (32, 128, 512),
-              seeds: Sequence[int] = (0,), use_mesh: bool = False
+              seeds: Sequence[int] = (0,), use_mesh=False
               ) -> SweepSpec:
     """Figure 2: constant high-LR random walk, one run per batch size."""
     base = RunSpec(
@@ -81,7 +81,7 @@ def diffusion(*, steps: int = 400, batches: Sequence[int] = (32, 128, 512),
 def batch_size_increase_sweep(*, steps: int = 2400, large_batch: int = 1024,
                               small_batch: int = 32, ghost: int = 16,
                               seeds: Sequence[int] = (0,),
-                              use_mesh: bool = False) -> SweepSpec:
+                              use_mesh=False) -> SweepSpec:
     """Smith et al. 2018 as a Table-1 column: constant LR with the batch
     grown where the SB regime would drop the LR, next to SB and the paper's
     full recipe."""
@@ -105,12 +105,15 @@ def batch_size_increase_sweep(*, steps: int = 2400, large_batch: int = 1024,
 
 
 def lm_smoke(*, steps: int = 30, arch: str = "qwen3-1.7b",
-             seeds: Sequence[int] = (0,), use_mesh: bool = False
+             seeds: Sequence[int] = (0,), use_mesh=False
              ) -> SweepSpec:
     """The recipe on a reduced assigned LM arch: SB vs LB with ghost
     gradient noise (the norm-free GBN twin) — a runner smoke, not a paper
     table. Runs ``use_kernels=True``: training differentiates through the
-    Pallas flash-attention / Mamba chunk-scan custom-VJP pairs."""
+    Pallas flash-attention / Mamba chunk-scan custom-VJP pairs.
+    ``use_mesh="2d"`` fans MoE-arch runs over the ``("data", "model")``
+    mesh (expert weights sharded over ``"model"``) when the geometry
+    allows; dense archs take the full-width data mesh instead."""
     base = RunSpec(
         name="lm-smoke", method="SB", model=_f1_reduced(),
         data=DataSpec(seed=1), lm_arch=arch, lm_seq_len=32,
@@ -119,8 +122,7 @@ def lm_smoke(*, steps: int = 30, arch: str = "qwen3-1.7b",
                             lr_rule="none", use_gbn=False),
         base_lr=0.02, total_steps=steps, drop_every=max(1, steps // 2),
         track_diffusion=False, weight_decay=0.0, use_kernels=True,
-        eval_every=max(1, steps // 2))
-    del use_mesh  # accepted for CLI uniformity; the LM step has no DP path
+        eval_every=max(1, steps // 2), use_mesh=use_mesh)
     lb_large = LargeBatchConfig(batch_size=32, base_batch_size=8,
                                 lr_rule="sqrt", use_gbn=False,
                                 ghost_noise=1.0)

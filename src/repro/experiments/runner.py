@@ -9,12 +9,16 @@ resumes from its last checkpointed (params, bn_state, opt_state, epoch,
 cursor, metrics) — the restarted sweep produces the same JSONL records as an
 uninterrupted one (shuffling is a pure function of (seed, epoch)).
 
-Runs fan over the 1-D ``("data",)`` mesh when more than one device is
-available and the run's batch geometry shards evenly
-(:func:`repro.train.data_parallel.mesh_compatible`).
+Runs fan over a mesh when more than one device is available and the run's
+geometry shards evenly (:func:`repro.train.parallel.mesh_compatible`):
+``use_mesh`` selects the topology — ``True``/``"data"`` for the 1-D
+``("data",)`` mesh, ``"2d"`` for the ``("data", "model")`` mesh (LM MoE
+expert weights sharded over ``"model"``) — and ``_mesh_for`` walks down the
+topology ladder to the widest compatible mesh, or single-device.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import shutil
 import time
@@ -24,20 +28,50 @@ from repro.experiments.metrics import MetricsLogger, ResultsStore
 from repro.experiments.spec import RunSpec, SweepSpec
 
 
+def _lm_config(spec: RunSpec):
+    """The reduced LM ModelConfig an LM run trains (shared by the trainer
+    dispatch and the mesh-geometry gate)."""
+    from repro.configs.registry import get_config
+    return dataclasses.replace(get_config(spec.lm_arch).reduced(),
+                               dtype="float32",
+                               vocab_size=spec.lm_vocab_size)
+
+
 def _mesh_for(spec: RunSpec):
-    """The ("data",) mesh if this run can use it, else None."""
+    """The widest mesh this run's topology request and geometry allow.
+
+    ``use_mesh`` is a topology selector: falsy -> None; True/"data" -> the
+    1-D ``("data",)`` mesh; "2d" -> the ``("data", "model")`` mesh. A "2d"
+    request degrades to the data mesh (and then to None) when the geometry
+    (batch % dp size, experts % model size — see
+    :func:`repro.train.parallel.mesh_compatible`) doesn't fit, or when the
+    run has nothing to shard over the model axis (vision or dense-LM runs
+    — a model axis would only replicate work that the wider data mesh
+    parallelizes).
+    """
     if not spec.use_mesh:
         return None
+    topo = "data" if spec.use_mesh is True else str(spec.use_mesh)
+    if topo not in ("data", "2d"):
+        raise ValueError(f"unknown mesh topology {spec.use_mesh!r}; "
+                         "expected False, True, 'data', or '2d'")
     import jax
-    from repro.launch.mesh import make_data_mesh
-    from repro.train.data_parallel import mesh_compatible
+    from repro.launch.mesh import make_2d_mesh, make_data_mesh
+    from repro.train.parallel import mesh_compatible
     if len(jax.devices()) < 2:
         return None
-    mesh = make_data_mesh()
+    cfg = _lm_config(spec) if spec.lm_arch else None
     sizes = (spec.batch_schedule.phases(spec.regime().total_steps)
              if spec.batch_schedule is not None else [spec.lb.batch_size])
-    if all(mesh_compatible(spec.lb, mesh, batch_size=b) for b in sizes):
-        return mesh
+    ladder = [make_data_mesh()]
+    if topo == "2d" and cfg is not None and cfg.moe is not None:
+        mesh2d = make_2d_mesh()
+        if "model" in mesh2d.axis_names and mesh2d.shape["model"] > 1:
+            ladder.insert(0, mesh2d)
+    for mesh in ladder:
+        if all(mesh_compatible(spec.lb, mesh, batch_size=b, cfg=cfg)
+               for b in sizes):
+            return mesh
     return None
 
 
@@ -93,14 +127,9 @@ def _run_vision(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
 
 def _run_lm(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
             log_fn):
-    import dataclasses
-
-    from repro.configs.registry import get_config
     from repro.data.synthetic import lm_sequences, token_lm
     from repro.train.trainer import train_lm
-    cfg = dataclasses.replace(get_config(spec.lm_arch).reduced(),
-                              dtype="float32",
-                              vocab_size=spec.lm_vocab_size)
+    cfg = _lm_config(spec)
     stream = token_lm(spec.data.seed, vocab_size=spec.lm_vocab_size,
                       n_tokens=spec.lm_n_tokens)
     rows = lm_sequences(stream, spec.lm_seq_len)
@@ -111,6 +140,7 @@ def _run_lm(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
         use_kernels=spec.use_kernels, weight_decay=spec.weight_decay,
         track_diffusion=spec.track_diffusion,
         diffusion_every=spec.diffusion_every, log_fn=log_fn,
+        mesh=_mesh_for(spec),
         checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every)
 
 

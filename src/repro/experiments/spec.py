@@ -69,7 +69,12 @@ class RunSpec:
     diffusion_every: int = 0          # 0 = auto cadence
     use_kernels: bool = False
     weight_decay: float = 5e-4
-    use_mesh: bool = False            # fan over the ("data",) mesh if usable
+    # mesh-topology selector: False/"" = single device; True or "data" =
+    # the 1-D ("data",) mesh; "2d" = the ("data", "model") mesh (expert
+    # weights sharded over "model"). The runner falls back down the
+    # topology ladder when a run's geometry doesn't fit (see
+    # experiments.runner._mesh_for).
+    use_mesh: Any = False
     # LM workload: set to a registry arch name to drive the LM trainer
     # instead of the vision one (model/data are then ignored)
     lm_arch: str = ""
@@ -94,7 +99,14 @@ class RunSpec:
     # -- identity / serialization ------------------------------------------
 
     def to_json(self) -> Dict[str, Any]:
-        return _to_jsonable(dataclasses.asdict(self))
+        obj = _to_jsonable(dataclasses.asdict(self))
+        # canonicalize the topology selector so equivalent requests hash to
+        # the same run_id: "data" == True (preserving run_ids recorded when
+        # the 1-D mesh was a boolean), any falsy == False.
+        um = obj.get("use_mesh")
+        obj["use_mesh"] = (True if um in (True, "data")
+                           else str(um) if um else False)
+        return obj
 
     @classmethod
     def from_json(cls, obj: Mapping[str, Any]) -> "RunSpec":

@@ -32,9 +32,42 @@ def make_data_mesh(n_devices: int = 0):
     return jax.make_mesh((n,), ("data",))
 
 
+def make_2d_mesh(n_devices: int = 0, model: int = 0):
+    """2-D ("data", "model") mesh over the local devices — the small-scale
+    twin of :func:`make_production_mesh`, used by the unified parallelism
+    layer (:mod:`repro.train.parallel`) and the experiments runner.
+
+    ``model=0`` picks the model-axis size automatically: 2 when the device
+    count is even (the smallest non-degenerate model axis — expert shards
+    stay coarse, dp stays wide), else 1.
+    """
+    n = n_devices or len(jax.devices())
+    m = model or (2 if n > 1 and n % 2 == 0 else 1)
+    if n % m:
+        raise ValueError(f"{n} devices do not factor into model={m}")
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
 def dp_axes(mesh) -> Tuple[str, ...]:
-    """The axes the global batch is sharded over."""
-    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+    """The axes the global batch is sharded over (only those present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    """Total data-parallel ways: the product of the present dp axis sizes."""
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def dp_spec_entry(mesh):
+    """The dp axes as one PartitionSpec entry: None when the mesh has no
+    data axes, the bare name for one, the tuple for several."""
+    axes = dp_axes(mesh)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
 
 
 def fsdp_axes(mesh) -> Tuple[str, ...]:

@@ -15,6 +15,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import time
@@ -71,6 +72,12 @@ def main() -> None:
     ap.add_argument("--grad-clip", type=float, default=1.0)
     ap.add_argument("--mesh", default="host",
                     choices=["host", "single", "multi"])
+    ap.add_argument("--parallel", default="pjit",
+                    choices=["pjit", "shard_map"],
+                    help="pjit: GSPMD auto-sharding from sharding/rules.py; "
+                         "shard_map: the unified 2-D layer "
+                         "(train/parallel.py) — batch over dp axes, expert "
+                         "weights over 'model', explicit collectives")
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--dtype", default="float32")
@@ -93,11 +100,18 @@ def main() -> None:
     rng = jax.random.PRNGKey(0)
     params = T.init_params(rng, cfg)
     opt_state = sgd.init(params)
-    pshard = rules.param_shardings(params, mesh, cfg)
-    params = jax.device_put(params, pshard)
-
-    step_fn = make_lm_train_step(cfg, lb, regime)
-    with mesh:
+    if args.parallel == "shard_map":
+        # unified 2-D layer: the shard_map carries its own mesh/specs — no
+        # ambient mesh context, no pjit placement (the first step shards).
+        step_fn = make_lm_train_step(cfg, lb, regime, mesh=mesh,
+                                     params=params)
+        mesh_ctx = contextlib.nullcontext()
+    else:
+        pshard = rules.param_shardings(params, mesh, cfg)
+        params = jax.device_put(params, pshard)
+        step_fn = make_lm_train_step(cfg, lb, regime)
+        mesh_ctx = mesh
+    with mesh_ctx:
         step_jit = jax.jit(step_fn, donate_argnums=(0, 1))
 
         seqs = build_batches(cfg, batch=args.batch, seq_len=args.seq_len,

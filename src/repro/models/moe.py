@@ -53,8 +53,16 @@ def moe_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
     return p
 
 
-def _route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
-    """x: (B, S, d) -> (topi, topw (B,S,k), aux losses)."""
+def _route(router_w: jax.Array, x: jax.Array, m: MoEConfig,
+           dp_axes: Tuple[str, ...] = ()):
+    """x: (B, S, d) -> (topi, topw (B,S,k), aux losses).
+
+    ``dp_axes`` (set inside a manual shard_map region, see
+    :func:`repro.core.expert_parallel.manual_mode`) makes the load-balance
+    statistics GLOBAL: f/P are pmean'd over the data axes through an
+    identity-backward fence, because the Switch loss is a product of means —
+    per-shard products would neither equal nor differentiate like the
+    single-device loss."""
     logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)   # (B,S,E)
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(probs, m.top_k)                      # (B,S,k)
@@ -63,6 +71,9 @@ def _route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
     sel = jax.nn.one_hot(topi[..., 0], m.n_experts, dtype=jnp.float32)
     f = sel.mean(axis=(0, 1))
     P = probs.mean(axis=(0, 1))
+    if dp_axes:
+        f = EP.mean_in_fwd(f, dp_axes)
+        P = EP.mean_in_fwd(P, dp_axes)
     aux = m.n_experts * jnp.sum(f * P)
     z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
     return topi, topw, {"moe_aux": aux, "moe_z": z}
@@ -96,7 +107,9 @@ def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array
     E, k = m.n_experts, m.top_k
     C = m.tokens_capacity(S)
 
-    topi, topw, aux = _route(params["router"], x, m)        # (B,S,k)
+    manual = EP.manual_state()                 # inside a shard_map region?
+    topi, topw, aux = _route(params["router"], x, m,
+                             dp_axes=manual[2] if manual else ())  # (B,S,k)
 
     # position of assignment (t, j) within its expert, ordered by (t, j).
     # Sort-based (O(S*k log) time, O(S*k) memory) — the naive one-hot cumsum
@@ -117,8 +130,15 @@ def moe_apply(params: Params, cfg: ModelConfig, x: jax.Array
     slot = slot_flat.reshape(B, S, k)
     keep = slot < C
 
+    mode = EP.manual_shard_mode(m, params) if manual else None
     mesh = current_mesh()
-    if EP.ep_applicable(m, mesh, B, 1 if decode else 0):
+    if mode is not None:
+        # already inside a shard_map region (the unified 2-D train step,
+        # train/parallel.py): weights arrive pre-sliced, the combine psum
+        # over the enclosing mesh's model axis is the only collective.
+        y = EP.ep_manual_combine(params, m, x, topi, topw, slot, keep, C,
+                                 axis=manual[0], mode=mode)
+    elif manual is None and EP.ep_applicable(m, mesh, B, 1 if decode else 0):
         # production path: shard_map expert parallelism (see
         # core/expert_parallel.py) — one psum per layer, no global
         # scatter/gather across the expert-sharded dim.

@@ -26,7 +26,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.mesh import dp_axes, fsdp_axes
 
 
-def _path_str(path) -> str:
+def path_str(path) -> str:
+    """Render a tree_map_with_path key path as the "a/b/c" strings the
+    parameter rules (and :mod:`repro.train.parallel`) match against."""
     parts = []
     for p in path:
         if hasattr(p, "key"):
@@ -36,6 +38,9 @@ def _path_str(path) -> str:
         else:
             parts.append(str(p))
     return "/".join(parts)
+
+
+_path_str = path_str
 
 
 def _fits(dim: int, mesh, axis) -> bool:

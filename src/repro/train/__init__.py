@@ -1,6 +1,9 @@
 from repro.train.data_parallel import (dp_gbn_forward,
                                        make_dp_vision_train_step,
                                        mesh_compatible)
+from repro.train.parallel import (make_mesh_lm_train_step,
+                                  make_mesh_vision_train_step,
+                                  mesh_param_specs)
 from repro.train.trainer import (make_lm_eval_step, make_lm_train_step,
                                  make_vision_eval, make_vision_loss_fn,
                                  make_vision_train_step, train_lm,
@@ -8,6 +11,8 @@ from repro.train.trainer import (make_lm_eval_step, make_lm_train_step,
 
 __all__ = [
     "dp_gbn_forward", "make_dp_vision_train_step", "mesh_compatible",
+    "make_mesh_lm_train_step", "make_mesh_vision_train_step",
+    "mesh_param_specs",
     "make_lm_eval_step", "make_lm_train_step", "make_vision_eval",
     "make_vision_loss_fn", "make_vision_train_step", "train_lm",
     "train_vision",

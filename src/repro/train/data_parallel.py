@@ -4,7 +4,9 @@ on hardware.
 Hoffer et al. compute normalization statistics over small "ghost" slices of
 the large batch — and note this is exactly what a data-parallel cluster does
 for free, since each device only ever sees its own shard. This module maps
-that observation onto a 1-D ``("data",)`` mesh with ``shard_map``:
+that observation onto a mesh with ``shard_map`` (historically the 1-D
+``("data",)`` mesh; the general data x model implementation now lives in
+:mod:`repro.train.parallel` and this module delegates to it):
 
 - the batch is sharded over the mesh; parameters, BN running state, and the
   optimizer state are replicated;
@@ -28,44 +30,44 @@ ghosts sequentially before the cross-device average (tested in
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.configs.base import ModelConfig
 from repro.configs.paper_models import VisionModelConfig
 from repro.core.compat import shard_map
 from repro.core.large_batch import LargeBatchConfig
 from repro.core.regime import Regime
-from repro.optim import sgd
-from repro.train.trainer import make_vision_loss_fn
+from repro.launch.mesh import dp_axes
+from repro.train import parallel
 
 Params = Any
 
 
-def _pmean_state(state: Params, axis: str) -> Params:
-    """Average the BN running stats across devices so the replicated state
-    stays identical everywhere; boolean flags ('initialized') are already
-    replicated and cannot be pmean'd."""
-    return jax.tree.map(
-        lambda s: s if s.dtype == jnp.bool_ else jax.lax.pmean(s, axis),
-        state)
+def _check_axis(axis: str, mesh) -> None:
+    """The kept-for-compat ``axis`` kwarg must name a dp axis of ``mesh`` —
+    silently ignoring a custom name would skip every pmean (the dp axes come
+    from the mesh itself now, see launch.mesh.dp_axes)."""
+    if axis not in dp_axes(mesh):
+        raise ValueError(
+            f"axis {axis!r} is not a data-parallel axis of mesh "
+            f"{tuple(mesh.axis_names)}; the batch shards over "
+            f"{dp_axes(mesh)}")
 
 
 def mesh_compatible(lb: LargeBatchConfig, mesh, *, axis: str = "data",
-                    batch_size: int = 0) -> bool:
-    """True when a batch can shard evenly over ``mesh``: the (possibly
-    schedule-overridden) batch splits across devices AND each device's local
-    shard still splits into whole ghost batches — the invariant that makes
-    the DP step's statistics match the single-device GBN step. The sweep
-    runner uses this to decide per run whether to fan over the mesh."""
-    b = batch_size or lb.batch_size
-    ndev = mesh.shape[axis]
-    if b % ndev:
-        return False
-    local = b // ndev
-    return (not lb.use_gbn) or local % lb.ghost_batch_size == 0
+                    batch_size: int = 0,
+                    cfg: Optional[ModelConfig] = None) -> bool:
+    """True when a batch can shard evenly over ``mesh`` — the general 2-D
+    geometry gate of :func:`repro.train.parallel.mesh_compatible` (batch
+    over the dp axes, whole ghost batches per dp shard, experts over the
+    model axis). ``axis`` is kept for 1-D callers and must name a mesh dp
+    axis."""
+    _check_axis(axis, mesh)
+    return parallel.mesh_compatible(lb, mesh, batch_size=batch_size, cfg=cfg)
 
 
 def make_dp_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
@@ -77,40 +79,18 @@ def make_dp_vision_train_step(model_apply: Callable, cfg: VisionModelConfig,
 
     Same signature as the single-device step —
     (params, bn_state, opt_state, x, y, step, rng) ->
-    (params, bn_state, opt_state, metrics) — with x, y sharded over ``axis``
-    and everything else replicated. Ghost statistics stay per-device; the
-    collectives are the gradient pmean plus the small EMA/metric averages.
+    (params, bn_state, opt_state, metrics) — with x, y sharded over the dp
+    axes and everything else replicated. Ghost statistics stay per-device;
+    the collectives are the gradient pmean plus the small EMA/metric
+    averages. Delegates to the unified mesh layer
+    (:func:`repro.train.parallel.make_mesh_vision_train_step`), which
+    accepts any ``(pod?, data, model?)`` mesh — this 1-D-era name is kept
+    for its call sites.
     """
-    sigma = lb.effective_noise_sigma()
-    loss_fn = make_vision_loss_fn(model_apply, cfg, lb,
-                                  use_kernels=use_kernels)
-
-    def local_step(params: Params, bn_state: Params,
-                   opt_state: sgd.SGDState, x: jax.Array, y: jax.Array,
-                   step: jax.Array, rng: jax.Array):
-        # local shard, local ghost statistics — Alg. 1 on this device only
-        (loss, (new_state, acc)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, bn_state, x, y)
-        # grads (+ EMA state and scalar metrics) cross devices; the
-        # normalization statistics never do
-        grads = jax.lax.pmean(grads, axis)
-        loss = jax.lax.pmean(loss, axis)
-        acc = jax.lax.pmean(acc, axis)
-        new_state = _pmean_state(new_state, axis)
-        lr = regime.lr_at(step)
-        params2, opt_state2, m = sgd.update(
-            grads, opt_state, params, lr=lr, momentum=lb.momentum,
-            weight_decay=weight_decay, grad_clip=lb.grad_clip,
-            noise_sigma=sigma, rng=rng)
-        return params2, new_state, opt_state2, {
-            "loss": loss, "acc": acc, "lr": lr, **m}
-
-    rep = P()
-    data = P(axis)
-    return shard_map(local_step, mesh=mesh,
-                     in_specs=(rep, rep, rep, data, data, rep, rep),
-                     out_specs=(rep, rep, rep, rep),
-                     check_vma=False)
+    _check_axis(axis, mesh)
+    return parallel.make_mesh_vision_train_step(
+        model_apply, cfg, lb, regime, mesh, weight_decay=weight_decay,
+        use_kernels=use_kernels)
 
 
 def dp_gbn_forward(x: jax.Array, gamma: jax.Array, beta: jax.Array, mesh, *,

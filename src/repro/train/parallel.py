@@ -1,0 +1,278 @@
+"""Unified 2-D parallelism: one shard_map layer composing data x model.
+
+The repo grew three disjoint parallelism islands — the 1-D ``("data",)``
+shard_map vision trainer (:mod:`repro.train.data_parallel`), the
+expert-parallel MoE dispatch assuming a ``"model"`` axis
+(:mod:`repro.core.expert_parallel`), and the pjit-rules LM launcher
+(:mod:`repro.launch.train` + :mod:`repro.sharding.rules`). This module
+collapses them into one production path over any mesh from
+:mod:`repro.launch.mesh` — ``(pod?, data, model)`` or any degenerate slice:
+
+- the global batch shards over ``mesh.dp_axes`` (pod x data);
+- MoE expert weights shard over ``"model"`` — the expert axis when it
+  divides, else each expert's hidden dim — with the spec derived from the
+  same :func:`repro.sharding.rules.param_specs` rules the pjit launcher
+  lowers with (restricted to the axes manual SPMD can honor, see
+  :func:`mesh_param_specs`);
+- everything else (non-expert params, optimizer state, BN state) is
+  replicated, and the per-step collectives are: the gradient ``pmean`` over
+  the dp axes ONLY, one combine ``psum`` over ``"model"`` per MoE layer
+  (:func:`repro.core.expert_parallel.ep_manual_combine` composes inside the
+  same shard_map region), a scalar psum for the corrected grad-clip norm,
+  and the small metric/EMA averages.
+
+Ghost statistics (the paper's central device-local quantity) never cross
+the wire: each dp shard normalizes — and draws ghost gradient noise — from
+its own slice, exactly as in the 1-D trainer.
+
+Gradient exactness: the expert-partial region is fenced with the adjoint
+pair ``region_in``/``region_out`` (see expert_parallel.py), so the sharded
+step's loss, gradients, and parameter trajectory MATCH the single-device
+step (tests/test_parallel_2d.py asserts multi-step equality for dense,
+expert-sharded, and ffn-sharded configs).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import expert_parallel as EP
+from repro.core.clipping import clip_by_global_norm
+from repro.core.compat import shard_map
+from repro.core.large_batch import LargeBatchConfig
+from repro.core.regime import Regime
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.optim import sgd
+from repro.sharding import rules
+
+Params = Any
+
+_EXPERT_RE = re.compile(r"/ff/w_(gate|up|down)$")
+
+
+# ---------------------------------------------------------------------------
+# spec derivation
+# ---------------------------------------------------------------------------
+
+
+def mesh_param_specs(params_or_shapes: Params, mesh) -> Params:
+    """shard_map in/out specs for the parameter pytree: the
+    :func:`repro.sharding.rules.param_specs` rules restricted to what a
+    manual (shard_map) region can honor.
+
+    Only the MoE expert tensors keep their ``"model"`` entry — their local
+    math + combine psum live in expert_parallel.py. Attention/MLP/mamba
+    weights, which the pjit path Megatron-shards via GSPMD propagation, are
+    replicated here (manual tensor parallelism for them would need psums the
+    model code doesn't carry), and the FSDP/data axes are dropped — the
+    unified layer is pure DP outside the experts.
+    """
+    if "model" not in mesh.axis_names:
+        # pure-dp mesh (e.g. the 1-D ("data",) mesh): everything replicates;
+        # the pjit rules would KeyError on their "model" lookups.
+        return jax.tree.map(lambda l: P(*([None] * len(l.shape))),
+                            params_or_shapes)
+    full = rules.param_specs(params_or_shapes, mesh)
+
+    def one(path, leaf, spec):
+        p = rules.path_str(path)
+        stacked = "stack/body" in p or re.search(r"(^|/)body/", p)
+        # expert tensors are (E, d, f) — rank 3 plus the scanned body dim.
+        # The dense-MLP weights share the w_gate/w_up/w_down names at rank
+        # 2: GSPMD Megatron-shards those, manual SPMD must replicate them.
+        keep = (bool(_EXPERT_RE.search(p))
+                and len(leaf.shape) - (1 if stacked else 0) == 3)
+        return P(*[e if (keep and e == "model") else None for e in spec])
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes, full)
+
+
+def mesh_compatible(lb: LargeBatchConfig, mesh, *, batch_size: int = 0,
+                    cfg: Optional[ModelConfig] = None) -> bool:
+    """True when a run's geometry fits ``mesh``:
+
+    - the (possibly schedule-overridden) batch splits evenly over the dp
+      axes, and each dp shard's slice still splits into whole ghost batches
+      (the invariant that keeps sharded statistics identical to the
+      single-device GBN step);
+    - with a >1 model axis and an MoE ``cfg``, the experts shard — either
+      the expert axis or each expert's hidden dim divides the model size.
+
+    The sweep runner uses this to decide per run whether (and over which
+    topology) to fan out.
+    """
+    b = batch_size or lb.batch_size
+    nd = mesh_lib.dp_size(mesh)
+    if nd == 0 or b % nd:
+        return False
+    local = b // nd
+    if lb.use_gbn and local % lb.ghost_batch_size:
+        return False
+    msize = mesh_lib.axis_size(mesh, "model")
+    if msize > 1 and cfg is not None and getattr(cfg, "moe", None) is not None:
+        m = cfg.moe
+        if m.n_experts % msize and m.d_expert % msize:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# LM train step (data x model)
+# ---------------------------------------------------------------------------
+
+
+def _sharded_global_norm(grads: Params, pspecs: Params,
+                         model_axis: Optional[str]) -> jax.Array:
+    """Global grad norm inside the region: leaves sharded over the model
+    axis contribute their local sum-of-squares through one scalar psum;
+    replicated leaves (identical on every model shard) are counted once."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(pspecs)
+    sq_rep = jnp.zeros((), jnp.float32)
+    sq_sh = jnp.zeros((), jnp.float32)
+    for g, s in zip(flat_g, flat_s):
+        ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        if model_axis is not None and any(e == "model" for e in s):
+            sq_sh = sq_sh + ss
+        else:
+            sq_rep = sq_rep + ss
+    if model_axis is not None:
+        sq_sh = jax.lax.psum(sq_sh, model_axis)
+    return jnp.sqrt(sq_rep + sq_sh)
+
+
+def make_mesh_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
+                            regime: Regime, mesh, params: Params, *,
+                            weight_decay: float = 0.0,
+                            use_kernels: bool = False,
+                            momentum_dtype: str = "float32",
+                            remat: bool = False,
+                            seq_parallel: bool = False,
+                            ce_chunk: int = 0) -> Callable:
+    """The LM train step sharded data x model over ``mesh``.
+
+    Same signature as :func:`repro.train.trainer.make_lm_train_step`'s
+    result — (params, opt_state, batch, step, rng) -> (params, opt_state,
+    metrics) — with the batch sharded over the dp axes, expert weights over
+    ``"model"``, and everything else replicated. ``params`` provides the
+    pytree/shapes the in/out specs are derived from. Differentiates through
+    the Pallas kernels (``use_kernels=True``) exactly like the unsharded
+    step; gradients are ``pmean`` ed over the dp axes only.
+
+    Note: with ``lb.ghost_noise > 0`` each model shard draws its noise for
+    its local expert slice, so the realization differs from the unsharded
+    step (the distribution does not); run equivalence tests noise-free.
+    """
+    if momentum_dtype == "int8":
+        raise NotImplementedError(
+            "int8 momentum blocks the trailing dim; its quantized buffers "
+            "need their own specs — use the pjit path or float32 momentum")
+    sigma = lb.effective_noise_sigma()
+    dp = mesh_lib.dp_axes(mesh)
+    dp_arg = mesh_lib.dp_spec_entry(mesh)
+    model_ax = "model" if "model" in mesh.axis_names else None
+    msize = mesh_lib.axis_size(mesh, "model")
+    pspecs = mesh_param_specs(params, mesh)
+    rep = P()
+    opt_specs = sgd.SGDState(momentum=pspecs, step=rep)
+
+    def local_step(params: Params, opt_state: sgd.SGDState,
+                   batch: Dict[str, jax.Array], step: jax.Array,
+                   rng: jax.Array):
+        def loss_fn(p):
+            with EP.manual_mode(model_ax, msize, dp):
+                return T.lm_loss(p, cfg, batch, use_kernels=use_kernels,
+                                 remat=remat, seq_parallel=seq_parallel,
+                                 ce_chunk=ce_chunk)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if dp:
+            grads = jax.lax.pmean(grads, dp)
+            loss = jax.lax.pmean(loss, dp)
+            metrics = jax.lax.pmean(metrics, dp)
+        clip_metrics: Dict[str, jax.Array] = {}
+        if lb.grad_clip and lb.grad_clip > 0:
+            norm = _sharded_global_norm(grads, pspecs, model_ax)
+            grads, gnorm = clip_by_global_norm(grads, lb.grad_clip, norm=norm)
+            clip_metrics["grad_norm"] = gnorm
+        lr = regime.lr_at(step)
+        params2, opt_state2, opt_metrics = sgd.update(
+            grads, opt_state, params,
+            lr=lr, momentum=lb.momentum, nesterov=lb.nesterov,
+            weight_decay=weight_decay, grad_clip=0.0,
+            noise_sigma=sigma, rng=rng, momentum_dtype=momentum_dtype)
+        metrics = {"loss": loss, "lr": lr, **metrics, **opt_metrics,
+                   **clip_metrics}
+        return params2, opt_state2, metrics
+
+    return shard_map(local_step, mesh=mesh,
+                     in_specs=(pspecs, opt_specs, P(dp_arg), rep, rep),
+                     out_specs=(pspecs, opt_specs, rep),
+                     check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# vision train step (dp over any mesh; model axis replicates)
+# ---------------------------------------------------------------------------
+
+
+def _pmean_state(state: Params, axes) -> Params:
+    """Average the BN running stats across dp shards so the replicated state
+    stays identical everywhere; boolean flags ('initialized') are already
+    replicated and cannot be pmean'd."""
+    return jax.tree.map(
+        lambda s: s if s.dtype == jnp.bool_ else jax.lax.pmean(s, axes),
+        state)
+
+
+def make_mesh_vision_train_step(model_apply: Callable, cfg, lb:
+                                LargeBatchConfig, regime: Regime, mesh, *,
+                                weight_decay: float = 5e-4,
+                                use_kernels: bool = False) -> Callable:
+    """shard_map twin of :func:`repro.train.trainer.make_vision_train_step`
+    over ANY production mesh: x, y shard over the dp axes; params, BN state,
+    and optimizer state are replicated (vision models carry no
+    model-sharded weights — a model axis just replicates the local step).
+    Ghost statistics stay per-dp-shard; the collectives are the gradient
+    pmean plus the small EMA/metric averages, all over the dp axes only."""
+    from repro.train.trainer import make_vision_loss_fn
+    sigma = lb.effective_noise_sigma()
+    loss_fn = make_vision_loss_fn(model_apply, cfg, lb,
+                                  use_kernels=use_kernels)
+    dp = mesh_lib.dp_axes(mesh)
+    dp_arg = mesh_lib.dp_spec_entry(mesh)
+
+    def local_step(params: Params, bn_state: Params,
+                   opt_state: sgd.SGDState, x: jax.Array, y: jax.Array,
+                   step: jax.Array, rng: jax.Array):
+        # local shard, local ghost statistics — Alg. 1 on this device only
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, bn_state, x, y)
+        # grads (+ EMA state and scalar metrics) cross devices; the
+        # normalization statistics never do
+        if dp:
+            grads = jax.lax.pmean(grads, dp)
+            loss = jax.lax.pmean(loss, dp)
+            acc = jax.lax.pmean(acc, dp)
+            new_state = _pmean_state(new_state, dp)
+        lr = regime.lr_at(step)
+        params2, opt_state2, m = sgd.update(
+            grads, opt_state, params, lr=lr, momentum=lb.momentum,
+            weight_decay=weight_decay, grad_clip=lb.grad_clip,
+            noise_sigma=sigma, rng=rng)
+        return params2, new_state, opt_state2, {
+            "loss": loss, "acc": acc, "lr": lr, **m}
+
+    rep = P()
+    data = P(dp_arg)
+    return shard_map(local_step, mesh=mesh,
+                     in_specs=(rep, rep, rep, data, data, rep, rep),
+                     out_specs=(rep, rep, rep, rep),
+                     check_vma=False)

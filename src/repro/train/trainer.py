@@ -39,7 +39,9 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
                        momentum_dtype: str = "float32",
                        remat: bool = False,
                        seq_parallel: bool = False,
-                       ce_chunk: int = 0) -> Callable:
+                       ce_chunk: int = 0,
+                       mesh=None, params: Optional[Params] = None
+                       ) -> Callable:
     """Build the jit-able LM train step implementing the paper's recipe.
 
     ``use_kernels=True`` routes both LM mixers through the Pallas kernels —
@@ -48,7 +50,23 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
     ``jax.custom_vjp`` (see docs/kernels.md), so ``jax.value_and_grad`` here
     never differentiates through an interpreted kernel body or replays an
     oracle forward.
+
+    With ``mesh`` (any mesh from :mod:`repro.launch.mesh`) the step runs
+    sharded data x model through the unified parallelism layer
+    (:mod:`repro.train.parallel`): batch over the dp axes, MoE expert
+    weights over ``"model"``, gradients pmean'd over the dp axes only.
+    ``params`` (the parameter pytree or its shapes) is required then — the
+    shard_map specs are derived from it.
     """
+    if mesh is not None:
+        if params is None:
+            raise ValueError("mesh-sharded LM step needs the params "
+                             "pytree to derive its specs")
+        from repro.train.parallel import make_mesh_lm_train_step
+        return make_mesh_lm_train_step(
+            cfg, lb, regime, mesh, params, weight_decay=weight_decay,
+            use_kernels=use_kernels, momentum_dtype=momentum_dtype,
+            remat=remat, seq_parallel=seq_parallel, ce_chunk=ce_chunk)
     sigma = lb.effective_noise_sigma()
 
     def train_step(params: Params, opt_state: sgd.SGDState,
@@ -219,10 +237,11 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
                  resume: bool = True) -> Dict[str, Any]:
     """Full training run; returns final/best accuracy + diffusion trace.
 
-    With ``mesh`` (a 1-D ``("data",)`` mesh from
-    :func:`repro.launch.mesh.make_data_mesh`) the step runs sharded
-    data-parallel: each device normalizes with its own ghost-batch
-    statistics and only gradients cross devices.
+    With ``mesh`` (any mesh from :mod:`repro.launch.mesh` — the 1-D
+    ``("data",)`` mesh or the 2-D ``(data, model)`` production shape) the
+    step runs sharded data-parallel over the mesh's dp axes: each dp shard
+    normalizes with its own ghost-batch statistics and only gradients cross
+    devices.
 
     The PRNG is split three ways — init / per-step gradient noise / data
     shuffling — so no consumer reuses another's key. Shuffling is a pure
@@ -326,6 +345,7 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
              weight_decay: float = 0.0, track_diffusion: bool = False,
              diffusion_every: int = 0,
              log_fn: Optional[Callable[[str], None]] = None,
+             mesh=None,
              checkpoint_dir: Optional[str] = None,
              checkpoint_every: int = 0, resume: bool = True
              ) -> Dict[str, Any]:
@@ -336,6 +356,10 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
     ``holdout`` rows from the end are held out for CE evaluation.
     ``use_kernels=True`` (what the ``lm-smoke`` sweep runs) trains through
     the differentiable Pallas flash-attention and Mamba chunk-scan kernels.
+
+    With ``mesh`` (mirroring :func:`train_vision`) the step runs through
+    the unified 2-D layer (:mod:`repro.train.parallel`): batch over the dp
+    axes, MoE expert weights over ``"model"``.
     """
     init_key, noise_key, shuffle_key = jax.random.split(
         jax.random.PRNGKey(seed), 3)
@@ -348,7 +372,8 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
 
     step_fn = jax.jit(make_lm_train_step(
         cfg, lb, regime, weight_decay=weight_decay,
-        use_kernels=use_kernels))
+        use_kernels=use_kernels, mesh=mesh,
+        params=params if mesh is not None else None))
     eval_fn = jax.jit(make_lm_eval_step(cfg, use_kernels=use_kernels))
 
     train_rows = rows[: rows.shape[0] - holdout] if holdout else rows
@@ -359,13 +384,18 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
         raise ValueError(f"{n} rows < batch_size {b}")
 
     def eval_ce() -> float:
-        if eval_rows.shape[0] == 0:
+        """Row-weighted mean CE over the WHOLE holdout: full batches of
+        ``b`` plus the trailing remainder (one extra jit shape) — previously
+        the tail rows were silently dropped whenever a full batch fit."""
+        n_eval = eval_rows.shape[0]
+        if n_eval == 0:
             return float("nan")
-        ces = [float(eval_fn(params,
-                             {"tokens": jnp.asarray(eval_rows[i:i + b])}))
-               for i in range(0, eval_rows.shape[0] - b + 1, b)] or [
-            float(eval_fn(params, {"tokens": jnp.asarray(eval_rows)}))]
-        return float(np.mean(ces))
+        total = 0.0
+        for i in range(0, n_eval, b):
+            chunk = eval_rows[i:i + b]
+            ce = float(eval_fn(params, {"tokens": jnp.asarray(chunk)}))
+            total += ce * chunk.shape[0]
+        return total / n_eval
 
     perm = _epoch_perm(shuffle_key, epoch, n)
     while step < regime.total_steps:
