@@ -414,6 +414,56 @@ def serve_decode_step(quick: bool) -> None:
          f"tok_per_s={B / (us / 1e6):.0f};cache={S}")
 
 
+def serve_prefill(quick: bool) -> None:
+    """Fused full-sequence prefill (one forward + K/V scatter) vs the
+    token-at-a-time decode-step loop it replaced, at a long-ish prompt."""
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.serving import prefill, prefill_fused
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    B, P = (4, 128) if quick else (8, 512)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size)
+    mk = lambda: T.init_cache(cfg, B, P + 8, dtype=jnp.float32)
+    f_step = jax.jit(lambda p, t, c: prefill(p, cfg, t, c)[0])
+    f_fused = jax.jit(lambda p, t, c: prefill_fused(p, cfg, t, c)[0])
+    t_step = _timeit(lambda: f_step(params, prompts, mk()), reps=3)
+    t_fused = _timeit(lambda: f_fused(params, prompts, mk()), reps=3)
+    emit("serve_prefill_stepwise", t_step, f"B={B},P={P}")
+    emit("serve_prefill_fused", t_fused,
+         f"speedup={t_step / max(t_fused, 1e-9):.1f}x")
+
+
+def serve_decode_tok_s(quick: bool) -> None:
+    """Decode throughput at the decode_32k shape (seq_len-deep cache,
+    mid-sequence position): the flash-decode Pallas kernel path (head-major
+    cache) vs the grouped-einsum path. Acceptance: kernel no slower."""
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.serving import make_serve_step
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    B, S = (4, 4096) if quick else (8, 32_768)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos = jnp.int32(S // 2)
+    results = {}
+    for name, uk in (("ref", False), ("kernel", True)):
+        cache = T.init_cache(cfg, B, S, dtype=jnp.float32,
+                             layout="head" if uk else "seq")
+        step = jax.jit(make_serve_step(cfg, use_kernels=uk))
+        results[name] = _timeit(lambda: step(params, cache, tok, pos)[0],
+                                reps=3)
+        del cache
+    emit("serve_decode_tok_s_ref", results["ref"],
+         f"tok_per_s={B / (results['ref'] / 1e6):.0f};cache={S}")
+    emit("serve_decode_tok_s", results["kernel"],
+         f"tok_per_s={B / (results['kernel'] / 1e6):.0f};"
+         f"vs_ref={results['ref'] / results['kernel']:.2f}x")
+
+
 def sweep_runner_overhead(quick: bool) -> None:
     """experiments.runner (spec expansion + JSONL store + checkpointing
     plumbing) vs calling train_vision directly for the same run — the
@@ -488,6 +538,8 @@ BENCHES: Dict[str, Callable] = {
     "mesh_lm_train_step": mesh_lm_train_step,
     "ep_dispatch_2d": ep_dispatch_2d,
     "serve_decode_step": serve_decode_step,
+    "serve_prefill": serve_prefill,
+    "serve_decode_tok_s": serve_decode_tok_s,
     "sweep_runner_overhead": sweep_runner_overhead,
     "roofline_from_dryrun": roofline_from_dryrun,
 }

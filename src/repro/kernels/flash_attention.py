@@ -88,7 +88,7 @@ def _band_intersects(q_start, k_start, *, causal: bool,
 
 
 def _visibility_mask(s_shape, q_start, k_start, *, causal: bool,
-                     window: Optional[int], seq_k: int):
+                     window: Optional[int], seq_k: int, kv_offset=None):
     q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
     k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 1)
     mask = k_idx < seq_k
@@ -96,6 +96,10 @@ def _visibility_mask(s_shape, q_start, k_start, *, causal: bool,
         mask &= k_idx <= q_idx
     if window is not None:
         mask &= k_idx > q_idx - window
+    if kv_offset is not None:
+        # left-padded ragged prefill: keys before this sequence's first real
+        # token are invisible (dynamic per-batch scalar)
+        mask &= k_idx >= kv_offset
     return mask
 
 
@@ -104,9 +108,14 @@ def _visibility_mask(s_shape, q_start, k_start, *, causal: bool,
 # ---------------------------------------------------------------------------
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
-                  *, scale: float, causal: bool, window: Optional[int],
-                  block_q: int, block_k: int, seq_k: int):
+def _flash_kernel(q_ref, k_ref, v_ref, *rest, scale: float, causal: bool,
+                  window: Optional[int], block_q: int, block_k: int,
+                  seq_k: int, has_offsets: bool = False):
+    if has_offsets:
+        off_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        off_ref = None
+        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -128,8 +137,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
         k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
         s = q @ k.T                                       # (bq, bk)
-        mask = _visibility_mask(s.shape, q_start, k_start, causal=causal,
-                                window=window, seq_k=seq_k)
+        mask = _visibility_mask(
+            s.shape, q_start, k_start, causal=causal, window=window,
+            seq_k=seq_k,
+            kv_offset=off_ref[0, 0] if has_offsets else None)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]                               # (bq, 1)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
@@ -153,6 +164,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            block_q: int = DEFAULT_BLOCK_Q,
                            block_k: int = DEFAULT_BLOCK_K,
                            return_residuals: bool = False,
+                           kv_offsets: Optional[jax.Array] = None,
                            interpret: bool = False
                            ) -> Union[jax.Array,
                                       Tuple[jax.Array, jax.Array]]:
@@ -161,6 +173,10 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``return_residuals=True`` additionally returns the per-row logsumexp
     ``lse`` (B, H, T) f32 — the residual the backward pass needs to
     recompute the probabilities blockwise.
+
+    ``kv_offsets`` (B,) int32 hides keys before each sequence's first real
+    token (left-padded ragged prefill). Forward-only: the serving fused
+    prefill uses it; the differentiable training entry does not expose it.
     """
     B, H, T, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
@@ -174,10 +190,19 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
     grid = (B, H, Tp // bq, Sp // bk)
 
+    has_offsets = kv_offsets is not None
+    inputs = (q, k, v)
+    off_specs = []
+    if has_offsets:
+        inputs = inputs + (jnp.asarray(kv_offsets, jnp.int32).reshape(B, 1),)
+        off_specs = [pl.BlockSpec((1, 1), lambda b, h, qi, ki: (b, 0),
+                                  memory_space=pltpu.SMEM)]
+
     out, lse = pl.pallas_call(
         functools.partial(
             _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
-            window=window, block_q=bq, block_k=bk, seq_k=S),
+            window=window, block_q=bq, block_k=bk, seq_k=S,
+            has_offsets=has_offsets),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
@@ -185,7 +210,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          lambda b, h, qi, ki: (b, h // g, ki, 0)),
             pl.BlockSpec((1, 1, bk, hd),
                          lambda b, h, qi, ki: (b, h // g, ki, 0)),
-        ],
+        ] + off_specs,
         out_specs=[
             pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
             # trailing unit axis keeps bq on the SUBLANE axis — a (1,1,bq)
@@ -203,7 +228,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),    # running normalizer
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*inputs)
     if return_residuals:
         return out[:, :, :T], lse[:, :, :T, 0]
     return out[:, :, :T]

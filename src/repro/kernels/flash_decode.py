@@ -1,0 +1,235 @@
+"""Pallas TPU flash-decode: single-query-row attention against a
+seq_len-deep KV cache — the serving hot path (decode_32k / long_500k).
+
+One new token per sequence attends every cached key: there is no q-block
+axis to tile, so the kernel streams KV blocks under an online-softmax
+accumulator exactly like the training flash forward, but with a (g, hd)
+query tile per kv head (g = H // KV, the GQA group — all q-heads that share
+a kv head are processed together, so K/V blocks are read once per kv head).
+
+Grid: (B, KV, n_kv_blocks) — the kv-block axis is innermost, so the running
+max / normalizer / output accumulator live in VMEM scratch across kv steps
+and the output tile is written once on the final step. The current position
+``pos`` and the optional per-sequence left-pad ``offsets`` are dynamic
+scalars (SMEM): blocks entirely beyond ``pos`` are skipped with ``pl.when``
+— at position p only ceil((p+1)/block_k) of the cache's n_kv_blocks are
+touched, which is what makes the seq_len-deep cache affordable early in the
+sequence.
+
+Cache layouts:
+
+- full attention: head-major ``(B, KV, S, hd)`` where slot ``s`` holds
+  global position ``s`` (``ring=False``);
+- sliding-window: the same shape but a ring buffer of ``S = min(max_len,
+  window)`` slots where slot ``s`` holds global position
+  ``pos - ((pos - s) mod S)`` (``ring=True``) — the slot->position map is
+  evaluated inside the kernel so masking works pre- and post-wrap.
+
+Visibility of a slot with global position g:  ``0 <= g <= pos``, and
+``g > pos - window`` when a window is given, and ``g >= offsets[b]`` for
+left-padded ragged prompts.
+
+Serving is forward-only: there is no backward kernel (decode takes no
+gradients). Public entry: :func:`repro.kernels.ops.flash_decode`; oracle:
+:func:`repro.kernels.ref.flash_decode_ref`.
+
+Off TPU, :func:`flash_decode_blockwise` is the serving lowering: the SAME
+blockwise online-softmax program as a ``lax.scan`` over KV blocks.
+Interpret-mode ``pallas_call`` pays a per-grid-step emulation cost
+proportional to the full operand size — on a seq_len-deep cache that is
+exactly the cost the kernel exists to avoid, so the hot serving path does
+not run it (the kernel itself is validated against the oracle via
+``interpret=True`` in tests/test_serving.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention import (NEG_INF, _round_up, _sublane)
+
+DEFAULT_BLOCK_K = 512
+
+
+def _slot_visibility(slot, pos, *, seq_k: int, window: Optional[int],
+                     ring: bool, offset=None):
+    """Visibility of cache slots at query position ``pos`` — the ONE
+    predicate shared by the Pallas kernel body, the blockwise CPU lowering,
+    and (in spirit) the jnp oracle. ``slot`` is an int32 array of slot
+    indices; ``offset`` an optional broadcastable left-pad bound."""
+    if ring:
+        gpos = pos - jnp.mod(pos - slot, seq_k)
+    else:
+        gpos = slot
+    mask = (slot < seq_k) & (gpos >= 0) & (gpos <= pos)
+    if window is not None:
+        mask &= gpos > pos - window
+    if offset is not None:
+        mask = mask & (gpos >= offset)
+    return mask
+
+
+def _flash_decode_kernel(pos_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         window: Optional[int], ring: bool, seq_k: int,
+                         block_k: int, has_offsets: bool):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0, 0]
+    k_start = ki * block_k
+    # dynamic block skip: a full-layout block is dead if its first slot is
+    # beyond pos (causal) or its last slot is older than the window. Ring
+    # slots have no monotone slot->position map, so ring never skips (the
+    # ring is at most window slots deep anyway).
+    if ring:
+        needed = jnp.bool_(True)
+    else:
+        needed = k_start <= pos
+        if window is not None:
+            needed = jnp.logical_and(needed,
+                                     k_start + block_k - 1 > pos - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (g, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                       # (g, bk)
+        slot = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = _slot_visibility(
+            slot, pos, seq_k=seq_k, window=window, ring=ring,
+            offset=off_ref[0, 0] if has_offsets else None)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # (g, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        pos: jax.Array, *, window: Optional[int] = None,
+                        ring: bool = False,
+                        offsets: Optional[jax.Array] = None,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, KV, S, hd) head-major cache -> (B, H, hd).
+
+    ``pos`` is the (dynamic) global position of the query token; slots whose
+    global position falls outside [max(offset, pos-window+1), pos] are
+    masked, where the slot->position map is the identity (``ring=False``) or
+    the ring-buffer map (``ring=True``, S = ring depth). ``offsets`` (B,)
+    masks the left padding of ragged prompts.
+    """
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    sub = max(_sublane(q.dtype), _sublane(k.dtype))
+    bk = _round_up(min(block_k, max(S, sub)), sub)
+    Sp = _round_up(S, bk)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    qg = q.reshape(B, KV, g, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+    has_offsets = offsets is not None
+    if has_offsets:
+        off_arr = jnp.asarray(offsets, jnp.int32).reshape(B, 1)
+    else:
+        off_arr = jnp.zeros((1, 1), jnp.int32)
+    off_spec = pl.BlockSpec(
+        (1, 1), (lambda b, h, ki: (b, 0)) if has_offsets
+        else (lambda b, h, ki: (0, 0)), memory_space=pltpu.SMEM)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_decode_kernel, scale=1.0 / math.sqrt(hd), window=window,
+            ring=ring, seq_k=S, block_k=bk, has_offsets=has_offsets),
+        grid=(B, KV, Sp // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki: (0, 0),
+                         memory_space=pltpu.SMEM),
+            off_spec,
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),   # output accumulator
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running normalizer
+        ],
+        interpret=interpret,
+    )(pos_arr, off_arr, qg, k, v)
+    return out.reshape(B, H, hd)
+
+
+def flash_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                           pos: jax.Array, *, window: Optional[int] = None,
+                           ring: bool = False,
+                           offsets: Optional[jax.Array] = None,
+                           block_k: int = 2048) -> jax.Array:
+    """Pure-jnp lowering of the same blockwise online-softmax program the
+    Pallas kernel runs: a ``lax.scan`` over KV blocks carrying (m, l, acc),
+    with the identical :func:`_slot_visibility` predicate. The off-TPU
+    serving path (see module docstring)."""
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    bk = min(block_k, S)
+    Sp = _round_up(S, bk)
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    nk = Sp // bk
+    qg = (q.astype(jnp.float32).reshape(B, KV, g, hd)
+          * (1.0 / math.sqrt(hd)))
+    kb = k.reshape(B, KV, nk, bk, hd).swapaxes(0, 2).swapaxes(1, 2)
+    vb = v.reshape(B, KV, nk, bk, hd).swapaxes(0, 2).swapaxes(1, 2)
+    off = None if offsets is None else offsets[:, None, None, None]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ki = inp                              # (B, KV, bk, hd)
+        s = jnp.einsum("bkgd,bksd->bkgs", qg, kblk.astype(jnp.float32))
+        slot = ki * bk + jnp.arange(bk)
+        mask = _slot_visibility(slot[None, None, None, :], pos, seq_k=S,
+                                window=window, ring=ring, offset=off)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(-1)
+        acc = (alpha[..., None] * acc
+               + jnp.einsum("bkgs,bksd->bkgd", p, vblk.astype(jnp.float32)))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, KV, g), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, g), jnp.float32),
+            jnp.zeros((B, KV, g, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -23,6 +23,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
                                            flash_attention_backward_pallas,
                                            flash_attention_pallas)
+from repro.kernels.flash_decode import (flash_decode_blockwise,
+                                        flash_decode_pallas)
 from repro.kernels.gbn import gbn_backward_pallas, gbn_forward_pallas
 from repro.kernels.mamba_scan import (mamba_chunk_backward_pallas,
                                       mamba_chunk_pallas)
@@ -68,7 +70,8 @@ _flash_attention.defvjp(_flash_fwd, _flash_bwd)
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True,
-                    window: Optional[int] = None) -> jax.Array:
+                    window: Optional[int] = None,
+                    kv_offsets: Optional[jax.Array] = None) -> jax.Array:
     """Layout adapter for the model code: q (B, T, H, hd); k, v
     (B, S, KV, hd) -> (B, T, H, hd). Internally head-major.
 
@@ -76,13 +79,58 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     (:func:`repro.kernels.flash_attention.flash_attention_backward_pallas`)
     via ``jax.custom_vjp``, validated against
     :func:`repro.kernels.ref.attention_vjp_ref`.
+
+    ``kv_offsets`` (B,) masks keys before each sequence's first real token
+    (the serving fused prefill's left-padded ragged prompts). That path is
+    FORWARD-ONLY — it bypasses the custom_vjp pair.
     """
     qm = q.swapaxes(1, 2)
     km = k.swapaxes(1, 2)
     vm = v.swapaxes(1, 2)
-    out = _flash_attention(qm, km, vm, causal, window,
-                           DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
+    if kv_offsets is not None:
+        out = flash_attention_pallas(qm, km, vm, causal=causal,
+                                     window=window, kv_offsets=kv_offsets,
+                                     interpret=_interpret())
+    else:
+        out = _flash_attention(qm, km, vm, causal, window,
+                               DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
     return out.swapaxes(1, 2)
+
+
+# ---------------------------------------------------------------------------
+# flash decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
+                 window: Optional[int] = None, ring: bool = False,
+                 offsets: Optional[jax.Array] = None) -> jax.Array:
+    """Single-row decode attention against a head-major cache.
+
+    Layout adapter for the model code: q (B, 1, H, hd); k, v (B, KV, S, hd)
+    -> (B, 1, H, hd). ``pos``/``offsets`` are dynamic (SMEM scalars in the
+    kernel); ``ring=True`` reads a sliding-window ring buffer of S slots.
+    Forward-only (serving takes no gradients); oracle:
+    :func:`repro.kernels.ref.flash_decode_ref`.
+
+    On TPU the Pallas kernel runs compiled; elsewhere the SAME blockwise
+    online-softmax program runs as a ``lax.scan``
+    (:func:`repro.kernels.flash_decode.flash_decode_blockwise`) — unlike
+    the training kernels, the decode hot loop cannot afford interpret-mode
+    pallas emulation, whose per-grid-step cost scales with the full cache
+    (the kernel body itself is oracle-validated under ``interpret=True`` in
+    tests/test_serving.py).
+    """
+    B, T, H, hd = q.shape
+    assert T == 1, q.shape
+    if _interpret():
+        out = flash_decode_blockwise(q.reshape(B, H, hd), k, v, pos,
+                                     window=window, ring=ring,
+                                     offsets=offsets)
+    else:
+        out = flash_decode_pallas(q.reshape(B, H, hd), k, v, pos,
+                                  window=window, ring=ring, offsets=offsets)
+    return out.reshape(B, 1, H, hd)
 
 
 def flash_attention_hm(q: jax.Array, k: jax.Array, v: jax.Array, *,

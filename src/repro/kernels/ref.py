@@ -88,6 +88,43 @@ def attention_vjp_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# flash decode oracle
+# ---------------------------------------------------------------------------
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None,
+                     ring: bool = False,
+                     offsets: Optional[jax.Array] = None) -> jax.Array:
+    """Single-row decode attention vs a cache. q: (B, H, hd); k, v:
+    (B, KV, S, hd). Returns (B, H, hd).
+
+    Slot ``s`` holds global position ``s`` (``ring=False``) or
+    ``pos - ((pos - s) mod S)`` (ring buffer of S slots). A slot with global
+    position g is visible iff ``0 <= g <= pos``, ``g > pos - window`` (when
+    windowed) and ``g >= offsets[b]`` (left-padded ragged prompts).
+    """
+    B, H, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.astype(jnp.float32).reshape(B, KV, g, hd)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg,
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    slot = jnp.arange(S)
+    gpos = pos - jnp.mod(pos - slot, S) if ring else slot
+    valid = (gpos >= 0) & (gpos <= pos)
+    if window is not None:
+        valid &= gpos > pos - window
+    valid = jnp.broadcast_to(valid[None], (B, S))
+    if offsets is not None:
+        valid &= gpos[None] >= offsets[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # ghost batch norm oracle
 # ---------------------------------------------------------------------------
 

@@ -1,9 +1,14 @@
-"""Serving launcher: batched greedy generation against a (reduced or full)
+"""Serving launcher: batched generation against a (reduced or full)
 architecture — the runnable counterpart of the decode dry-run shapes.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b-reduced \
-        --batch 8 --prompt-len 16 --max-new 32
+        --batch 8 --prompt-len 16 --max-new 32 [--use-kernels] \
+        [--temperature 0.8 --top-k 40] [--prompt-lens 5,16,9,...]
+
+Reports cold (incl. compile) and warm (post-compile) tok/s; ``--use-kernels``
+routes prefill through the fused flash-attention forward and decode through
+the flash-decode Pallas kernel over a head-major cache.
 """
 from __future__ import annotations
 
@@ -26,14 +31,36 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="fused flash prefill + flash-decode Pallas kernel")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples logits/temperature")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits (0 = all)")
+    ap.add_argument("--prompt-lens", default="",
+                    help="comma-separated per-sequence prompt lengths "
+                         "(<= --prompt-len); prompts are left-padded ragged")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
-    rng = jax.random.PRNGKey(0)
+    rng = jax.random.PRNGKey(args.seed)
     params = T.init_params(rng, cfg)
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+    prompt_lens = None
+    if args.prompt_lens:
+        lens = [int(x) for x in args.prompt_lens.split(",")]
+        if (len(lens) != args.batch or max(lens) > args.prompt_len
+                or min(lens) < 1):
+            raise SystemExit("--prompt-lens needs --batch entries, each in "
+                             "[1, --prompt-len]")
+        prompt_lens = jnp.array(lens, jnp.int32)
+        # left-pad: real tokens right-aligned, pad id 0 on the left
+        col = jnp.arange(args.prompt_len)[None]
+        prompts = jnp.where(col >= args.prompt_len - prompt_lens[:, None],
+                            prompts, 0)
     memory = None
     if cfg.vision is not None:
         memory = 0.1 * jax.random.normal(
@@ -44,14 +71,28 @@ def main() -> None:
             jax.random.PRNGKey(2), (args.batch, 32, cfg.encoder.d_model))
         memory = T.encode(params, cfg, frames.astype(jnp.dtype(cfg.dtype)))
 
-    t0 = time.time()
-    out = generate(params, cfg, prompts, max_new_tokens=args.max_new,
-                   memory=memory)
-    out.block_until_ready()
-    dt = time.time() - t0
+    gen = jax.jit(lambda p, toks: generate(
+        p, cfg, toks, max_new_tokens=args.max_new, memory=memory,
+        use_kernels=args.use_kernels, temperature=args.temperature,
+        top_k=args.top_k, rng=jax.random.PRNGKey(args.seed + 1),
+        prompt_lens=prompt_lens))
+
+    def run():
+        return gen(params, prompts)
+
     n_new = args.batch * args.max_new
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({n_new / dt:.1f} tok/s incl. compile)")
+    t0 = time.time()
+    out = run()
+    out.block_until_ready()
+    cold = time.time() - t0
+    t0 = time.time()
+    out = run()
+    out.block_until_ready()
+    warm = time.time() - t0
+    print(f"generated {out.shape} kernels={args.use_kernels} "
+          f"temperature={args.temperature}")
+    print(f"cold: {cold:.2f}s ({n_new / cold:.1f} tok/s incl. compile)   "
+          f"warm: {warm:.2f}s ({n_new / warm:.1f} tok/s)")
     print("sample row:", out[0, :32].tolist())
 
 

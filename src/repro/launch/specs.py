@@ -161,8 +161,11 @@ def decode_setup(cfg: ModelConfig, shape: InputShape, mesh, *,
     mem_len = T.memory_len(cfg, S)
     serve_step = make_serve_step(cfg, use_kernels)
     params = abstract_params(cfg)
+    # kernel decode reads the head-major cache natively (flash-decode's
+    # KV-block layout); the grouped-einsum path keeps the seq-major layout
     cache = jax.eval_shape(
-        lambda: T.init_cache(cfg, B, S, memory_len=mem_len, dtype=dt))
+        lambda: T.init_cache(cfg, B, S, memory_len=mem_len, dtype=dt,
+                             layout="head" if use_kernels else "seq"))
     pspecs = rules.param_specs(params, mesh, cfg)
     cspecs = rules.cache_specs(cache, mesh, B)
     args = (params, cache, Sds((B, 1), jnp.int32), Sds((), jnp.int32))

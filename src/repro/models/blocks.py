@@ -70,12 +70,16 @@ def block_init(rng, cfg: ModelConfig, spec: LayerSpec, dtype=jnp.float32
 
 
 def block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
-                memory_len: int = 0, dtype=jnp.bfloat16) -> Params:
-    """Decode-time cache for one block."""
+                memory_len: int = 0, dtype=jnp.bfloat16,
+                layout: str = "seq") -> Params:
+    """Decode-time cache for one block. ``layout`` picks the KV cache
+    layout: "seq" (B, S, kv, hd) or "head" (B, kv, S, hd) — the
+    flash-decode kernel's native layout (see ``layers.init_kv_cache``)."""
     c: Params = {}
     if spec.mixer in ("attn", "swa"):
         window = cfg.sliding_window if spec.mixer == "swa" else None
-        c["attn"] = L.init_kv_cache(cfg, batch, max_len, window, dtype)
+        c["attn"] = L.init_kv_cache(cfg, batch, max_len, window, dtype,
+                                    layout=layout)
     elif spec.mixer == "ssm":
         c["ssm"] = SSM.init_ssm_cache(cfg, batch)
     if spec.cross_attn:
@@ -94,14 +98,24 @@ def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
                 decode: bool = False,
                 causal: bool = True,
                 use_kernels: bool = False,
+                offsets: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
-    """Apply one block. Returns (x, new_cache or None, aux)."""
+    """Apply one block. Returns (x, new_cache or None, aux).
+
+    Three cache modes: no cache (train / plain forward), ``decode=True``
+    (one token against the cache), and PREFILL (``cache`` given with
+    ``decode=False``): the full-sequence mixers run once and the resulting
+    K/V / SSM state is scattered into the cache in the same pass.
+    ``offsets`` (B,) are per-sequence left-pad widths for ragged prompts
+    (threaded into the attention validity masks and SSM input masking).
+    """
     aux = dict(ZERO_AUX)
+    prefill = cache is not None and not decode
     new_cache: Params = {} if cache is not None else None
 
     if spec.cross_attn:
         h = L.norm_apply(cfg, params["norm_x"], x)
-        if decode:
+        if decode or prefill:
             y = L.cross_attention_apply(
                 params["cross"], cfg, h, cache["cross_k"], cache["cross_v"])
             new_cache["cross_k"] = cache["cross_k"]
@@ -116,7 +130,15 @@ def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
         h = L.norm_apply(cfg, params["norm1"], x)
         if decode:
             y, kvc = L.attention_decode(params["mixer"], cfg, h,
-                                        cache["attn"], pos, window=window)
+                                        cache["attn"], pos, window=window,
+                                        offsets=offsets,
+                                        use_kernels=use_kernels)
+            new_cache["attn"] = kvc
+        elif prefill:
+            y, kvc = L.attention_prefill(params["mixer"], cfg, h, positions,
+                                         cache["attn"], window=window,
+                                         offsets=offsets,
+                                         use_kernels=use_kernels)
             new_cache["attn"] = kvc
         else:
             y = L.attention_full(params["mixer"], cfg, h, positions,
@@ -128,6 +150,15 @@ def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
         if decode:
             y, sc = SSM.ssm_decode(params["mixer"], cfg, h, cache["ssm"])
             new_cache["ssm"] = sc
+        elif prefill:
+            valid = None
+            if offsets is not None:
+                valid = jnp.arange(x.shape[1])[None] >= offsets[:, None]
+            y, sc = SSM.ssm_prefill(params["mixer"], cfg, h, valid=valid,
+                                    use_kernels=use_kernels)
+            old = cache["ssm"]
+            new_cache["ssm"] = {"h": sc["h"].astype(old["h"].dtype),
+                                "conv": sc["conv"].astype(old["conv"].dtype)}
         else:
             y = SSM.ssm_forward(params["mixer"], cfg, h,
                                 use_kernels=use_kernels)
@@ -166,9 +197,11 @@ def stack_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 
 def stack_cache(cfg: ModelConfig, batch: int, max_len: int,
-                memory_len: int = 0, dtype=jnp.bfloat16) -> Params:
+                memory_len: int = 0, dtype=jnp.bfloat16,
+                layout: str = "seq") -> Params:
     def one(spec):
-        return block_cache(cfg, spec, batch, max_len, memory_len, dtype)
+        return block_cache(cfg, spec, batch, max_len, memory_len, dtype,
+                           layout)
 
     def stacked(spec):
         c = one(spec)
@@ -197,6 +230,7 @@ def stack_apply(params: Params, cfg: ModelConfig, x: jax.Array, *,
                 use_kernels: bool = False,
                 remat: bool = False,
                 seq_parallel: bool = False,
+                offsets: Optional[jax.Array] = None,
                 ) -> Tuple[jax.Array, Optional[Params], Dict[str, jax.Array]]:
     """Run the full head+body+tail stack.
 
@@ -205,11 +239,11 @@ def stack_apply(params: Params, cfg: ModelConfig, x: jax.Array, *,
     storing per-layer activations for 4k x 256 batches would exceed HBM.
     ``seq_parallel=True`` additionally shards the residual stream over
     (sequence x 'model') between blocks (see ``_sp_hint``).
+    ``cache`` with ``decode=False`` is the fused-prefill mode (see
+    ``block_apply``); ``offsets`` are the ragged-prompt left-pad widths.
     """
     aux = dict(ZERO_AUX)
     new_cache = {"head": [], "body": [], "tail": []} if cache is not None else None
-    kw = dict(positions=positions, memory=memory, pos=pos, decode=decode,
-              causal=causal, use_kernels=use_kernels)
 
     def make_block_fn(spec: LayerSpec):
         """Bind the static arguments; optionally wrap in jax.checkpoint."""
@@ -217,7 +251,8 @@ def stack_apply(params: Params, cfg: ModelConfig, x: jax.Array, *,
             x = _sp_hint(x, seq_parallel)
             out = block_apply(p, cfg, spec, x, cache=c, positions=positions,
                               memory=memory, pos=pos, decode=decode,
-                              causal=causal, use_kernels=use_kernels)
+                              causal=causal, use_kernels=use_kernels,
+                              offsets=offsets)
             return (_sp_hint(out[0], seq_parallel),) + out[1:]
         if remat:
             return jax.checkpoint(

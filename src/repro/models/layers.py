@@ -281,46 +281,158 @@ def attention_full(params: Params, cfg: ModelConfig, x: jax.Array,
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
-                  window: Optional[int] = None, dtype=jnp.bfloat16) -> Params:
+                  window: Optional[int] = None, dtype=jnp.bfloat16,
+                  layout: str = "seq") -> Params:
     """KV cache for one attention layer. SWA layers use a ring buffer of
-    ``window`` slots; full layers allocate ``max_len``."""
+    ``window`` slots; full layers allocate ``max_len``.
+
+    ``layout="seq"`` stores (B, S, kv, hd) — the layout the grouped-einsum
+    decode path and the sharding rules expect. ``layout="head"`` stores
+    (B, kv, S, hd) under keys ``kh``/``vh`` — the flash-decode kernel's
+    native layout (the sequence axis lands on the sublane axis of its KV
+    blocks). The key names carry the layout, so every consumer can
+    self-describe instead of threading a flag."""
     S = min(max_len, window) if window is not None else max_len
     kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if layout == "head":
+        return {
+            "kh": jnp.zeros((batch, kv, S, hd), dtype=dtype),
+            "vh": jnp.zeros((batch, kv, S, hd), dtype=dtype),
+        }
     return {
         "k": jnp.zeros((batch, S, kv, hd), dtype=dtype),
         "v": jnp.zeros((batch, S, kv, hd), dtype=dtype),
     }
 
 
+def _cache_kv(cache: Params) -> Tuple[jax.Array, jax.Array, bool]:
+    """(k, v, head_major) for either cache layout."""
+    if "kh" in cache:
+        return cache["kh"], cache["vh"], True
+    return cache["k"], cache["v"], False
+
+
+def _cache_valid_mask(pos, S: int, *, ring: bool,
+                      offsets: Optional[jax.Array]) -> jax.Array:
+    """(B?, S) visibility of cache slots at query position ``pos``.
+
+    Delegates to the SAME ``_slot_visibility`` predicate the flash-decode
+    kernel and its blockwise lowering use, so the kernel and non-kernel
+    decode masks cannot drift. Slot ``s`` holds global position ``s`` (full
+    cache) or ``pos - ((pos - s) mod S)`` (ring buffer); window membership
+    is implied by the ring depth (S = min(max_len, window)). ``offsets``
+    adds the per-sequence left-pad bound for ragged prompts (returns (B, S)
+    in that case)."""
+    from repro.kernels.flash_decode import _slot_visibility
+    idx = jnp.arange(S)
+    if offsets is None:
+        return _slot_visibility(idx, pos, seq_k=S, window=None, ring=ring)
+    return _slot_visibility(idx[None, :], pos, seq_k=S, window=None,
+                            ring=ring, offset=offsets[:, None])
+
+
 def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
                      cache: Params, pos: jax.Array, *,
-                     window: Optional[int] = None) -> Tuple[jax.Array, Params]:
+                     window: Optional[int] = None,
+                     offsets: Optional[jax.Array] = None,
+                     use_kernels: bool = False) -> Tuple[jax.Array, Params]:
     """One-token decode. x: (B, 1, D); pos: scalar int32 (current index).
+
+    ``offsets`` (B,) int32: per-sequence left-pad widths for ragged
+    prompts — RoPE positions become ``pos - offsets[b]`` and cache slots
+    before each sequence's first real token are masked.
+    ``use_kernels=True`` routes the cache attention through the Pallas
+    flash-decode kernel (native on a head-major cache; a seq-major cache is
+    transposed on the fly — correct but not the fast path).
 
     Returns (y (B,1,D), new_cache).
     """
     B = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
-    q, k, v = _project_qkv(params, cfg, x, positions)
-    S = cache["k"].shape[1]
-    slot = pos % S if window is not None else pos
-    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                      (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                      (0, slot, 0, 0))
-    idx = jnp.arange(S)
-    if window is not None:
-        # ring buffer of S = min(max_len, window) slots: before wrap-around
-        # only slots 0..pos are filled; after wrap every slot holds one of the
-        # last S (= window) positions, all of which are in-window.
-        valid = (idx <= slot) | (pos >= S)
+    if offsets is None:
+        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
     else:
-        valid = idx <= pos
-    m = jnp.broadcast_to(valid[None, None, :], (B, 1, S))
-    out = _sdpa_grouped(q, ck.astype(q.dtype), cv.astype(q.dtype), m)
+        positions = (pos - offsets)[:, None].astype(jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    ck, cv, head_major = _cache_kv(cache)
+    seq_ax = 2 if head_major else 1
+    S = ck.shape[seq_ax]
+    slot = pos % S if window is not None else pos
+    start = (0, 0, slot, 0) if head_major else (0, slot, 0, 0)
+    kw = k.swapaxes(1, 2) if head_major else k
+    vw = v.swapaxes(1, 2) if head_major else v
+    ck = jax.lax.dynamic_update_slice(ck, kw.astype(ck.dtype), start)
+    cv = jax.lax.dynamic_update_slice(cv, vw.astype(cv.dtype), start)
+    new_cache = {"kh": ck, "vh": cv} if head_major else {"k": ck, "v": cv}
+    ring = window is not None
+    if use_kernels:
+        from repro.kernels import ops as kops
+        khm = ck if head_major else ck.swapaxes(1, 2)
+        vhm = cv if head_major else cv.swapaxes(1, 2)
+        out = kops.flash_decode(q, khm.astype(q.dtype), vhm.astype(q.dtype),
+                                pos, window=window, ring=ring,
+                                offsets=offsets)
+    else:
+        valid = _cache_valid_mask(pos, S, ring=ring, offsets=offsets)
+        m = jnp.broadcast_to(valid[None, None, :] if valid.ndim == 1
+                             else valid[:, None, :], (B, 1, S))
+        ks = ck.swapaxes(1, 2) if head_major else ck
+        vs = cv.swapaxes(1, 2) if head_major else cv
+        out = _sdpa_grouped(q, ks.astype(q.dtype), vs.astype(q.dtype), m)
     y = out.reshape(B, 1, h * hd) @ params["wo"].astype(x.dtype)
-    return y, {"k": ck, "v": cv}
+    return y, new_cache
+
+
+def attention_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array, cache: Params, *,
+                      window: Optional[int] = None,
+                      offsets: Optional[jax.Array] = None,
+                      use_kernels: bool = False
+                      ) -> Tuple[jax.Array, Params]:
+    """Fused prefill for one attention layer: full-sequence attention that
+    also scatters every position's K/V into the decode cache in one pass.
+
+    x: (B, P, D); positions: (B, P) RoPE positions (already offset for
+    left-padded ragged prompts). Full caches receive tokens 0..P-1 at slots
+    0..P-1; SWA ring caches keep the last ``min(P, ring)`` tokens at their
+    ring slots ``t % ring``. Returns (y (B, P, D), filled cache).
+    """
+    B, P, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    ck, cv, head_major = _cache_kv(cache)
+    seq_ax = 2 if head_major else 1
+    S = ck.shape[seq_ax]
+    assert window is not None or P <= S, (P, S)
+
+    def fill(c, t):
+        if head_major:
+            t = t.swapaxes(1, 2)
+        if P <= S:
+            return jax.lax.dynamic_update_slice(c, t.astype(c.dtype),
+                                                (0, 0, 0, 0))
+        # ring wrap: keep the last S tokens; token at global position g
+        # lands at slot g % S, i.e. the (P - S)-rotated tail of the window
+        tail = jax.lax.slice_in_dim(t, P - S, P, axis=seq_ax)
+        return jnp.roll(tail, (P - S) % S, axis=seq_ax).astype(c.dtype)
+
+    new_cache = {"kh": fill(ck, k), "vh": fill(cv, v)} if head_major \
+        else {"k": fill(ck, k), "v": fill(cv, v)}
+
+    if use_kernels:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window,
+                                   kv_offsets=offsets)
+    else:
+        m = (window_mask(P, P, window) if window is not None
+             else causal_mask(P, P))
+        if offsets is not None:
+            m = m[None] & (jnp.arange(P)[None, None, :]
+                           >= offsets[:, None, None])
+        else:
+            m = m[None]
+        out = _sdpa(q, k, v, m)
+    y = out.reshape(B, P, -1) @ params["wo"].astype(x.dtype)
+    return y, new_cache
 
 
 # -- cross attention ---------------------------------------------------------

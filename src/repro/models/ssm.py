@@ -111,17 +111,35 @@ def _chunk_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
 
 def ssm_forward(params: Params, cfg: ModelConfig, x: jax.Array,
                 chunk: int = DEFAULT_CHUNK,
-                use_kernels: bool = False) -> jax.Array:
-    """Full-sequence mamba mixer. x: (B, S, d_model) -> (B, S, d_model)."""
+                use_kernels: bool = False,
+                valid: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Full-sequence mamba mixer. x: (B, S, d_model) -> (B, S, d_model).
+
+    ``valid`` (B, S) bool masks left-padded ragged prompts: invalid
+    positions contribute zero conv taps (exactly the causal zero-padding an
+    unpadded run sees before its first token) and identity state updates
+    (``dt = 0`` => a = 1, b = 0), so the carried state matches the unpadded
+    per-sequence run; outputs at invalid positions are garbage and must be
+    discarded by the caller.
+
+    ``return_state=True`` additionally returns the decode cache
+    ``{"h", "conv"}`` at the last position — the fused-prefill handoff to
+    :func:`ssm_decode`.
+    """
     B, S, _ = x.shape
     dt_ = x.dtype
     s = cfg.ssm
     di = s.d_inner(cfg.d_model)
     xin, z = _split_in(params, cfg, x)
+    if valid is not None:
+        xin = jnp.where(valid[..., None], xin, 0)
     xin = hint(xin, "dp", None, "model")
     xc = hint(jax.nn.silu(_causal_conv_full(params, cfg, xin)),
               "dp", None, "model")
     dt, Bmat, Cmat = _bcdt(params, cfg, xc)          # (B,S,di) (B,S,ds) (B,S,ds)
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     dt = hint(dt, "dp", None, "model")
     A = -jnp.exp(params["A_log"])                    # (di, ds)
 
@@ -163,11 +181,30 @@ def ssm_forward(params: Params, cfg: ModelConfig, x: jax.Array,
           B_p.reshape(B, nch, c, s.d_state).swapaxes(0, 1),
           C_p.reshape(B, nch, c, s.d_state).swapaxes(0, 1))
     h0 = jnp.zeros((B, di, s.d_state), dtype=jnp.float32)
-    _, ys = jax.lax.scan(step, h0, xs)
+    h_last, ys = jax.lax.scan(step, h0, xs)
     y = ys.swapaxes(0, 1).reshape(B, Sp, di)[:, :S]
     y = y + params["D"] * xc.astype(jnp.float32)
     y = y.astype(dt_) * jax.nn.silu(z)
-    return y @ params["out_proj"].astype(dt_)
+    out = y @ params["out_proj"].astype(dt_)
+    if not return_state:
+        return out
+    # decode handoff: conv state = the last d_conv-1 (masked) inputs, padded
+    # with the same causal zeros a fresh sequence starts from
+    k = s.d_conv - 1
+    if S >= k:
+        conv = xin[:, S - k:]
+    else:
+        conv = jnp.pad(xin, ((0, 0), (k - S, 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv.astype(dt_)}
+
+
+def ssm_prefill(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                valid: Optional[jax.Array] = None,
+                use_kernels: bool = False) -> Tuple[jax.Array, Params]:
+    """Fused prefill: full-sequence mixer that also returns the decode
+    cache ``{"h", "conv"}`` ready for :func:`ssm_decode`."""
+    return ssm_forward(params, cfg, x, use_kernels=use_kernels,
+                       valid=valid, return_state=True)
 
 
 # -- decode ------------------------------------------------------------------

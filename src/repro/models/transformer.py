@@ -135,8 +135,13 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               memory_len: int = 0, dtype=jnp.bfloat16) -> Params:
-    return B.stack_cache(cfg, batch, max_len, memory_len, dtype)
+               memory_len: int = 0, dtype=jnp.bfloat16,
+               layout: str = "seq") -> Params:
+    """``layout="head"`` builds the flash-decode kernel's native head-major
+    KV caches (serving ``use_kernels=True``); "seq" is the classic
+    (B, S, kv, hd) layout the grouped-einsum decode and sharding rules
+    expect."""
+    return B.stack_cache(cfg, batch, max_len, memory_len, dtype, layout)
 
 
 def memory_len(cfg: ModelConfig, seq_len: int) -> int:
@@ -178,15 +183,54 @@ def build_cross_cache(params: Params, cfg: ModelConfig, memory: jax.Array,
 
 def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
                 cache: Params, pos: jax.Array, *,
-                use_kernels: bool = False
+                use_kernels: bool = False,
+                offsets: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Params]:
-    """tokens: (B, 1) int32; pos: scalar int32 -> (logits (B,1,V), new cache)."""
+    """tokens: (B, 1) int32; pos: scalar int32 -> (logits (B,1,V), new cache).
+
+    ``use_kernels=True`` routes cache attention through the Pallas
+    flash-decode kernel. ``offsets`` (B,) are per-sequence left-pad widths
+    for ragged (left-padded) prompts: RoPE positions shift to
+    ``pos - offsets`` and padded cache slots are masked out of every
+    attention."""
     dtype = _compute_dtype(cfg)
     x = params["embed"][tokens].astype(dtype)
     x, new_cache, _ = B.stack_apply(params["stack"], cfg, x, cache=cache,
                                     pos=pos, decode=True,
-                                    use_kernels=use_kernels)
+                                    use_kernels=use_kernels, offsets=offsets)
     x = L.norm_apply(cfg, params["final_norm"], x)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(dtype).T
+    return logits, new_cache
+
+
+def prefill_forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                    cache: Params, *,
+                    use_kernels: bool = False,
+                    offsets: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Params]:
+    """Fused prefill: ONE full-sequence forward that scatters every layer's
+    K/V (and SSM state) into the decode cache and returns only the
+    last-position logits.
+
+    tokens: (B, P) int32 -> (logits (B, 1, V), filled cache). Cross-attention
+    caches must already be filled (``build_cross_cache``). With ``offsets``
+    (left-padded ragged prompts) the per-row RoPE positions start at each
+    sequence's first real token and padded positions are masked out of the
+    attention and SSM state — so the filled cache matches what each
+    sequence would produce unpadded. The last column is each sequence's
+    final prompt token (left padding), so one logits row serves every row.
+    """
+    dtype = _compute_dtype(cfg)
+    Bsz, P = tokens.shape
+    x = params["embed"][tokens].astype(dtype)
+    base = jnp.broadcast_to(jnp.arange(P)[None], (Bsz, P))
+    positions = base if offsets is None else base - offsets[:, None]
+    x, new_cache, _ = B.stack_apply(params["stack"], cfg, x, cache=cache,
+                                    positions=positions, decode=False,
+                                    causal=cfg.causal,
+                                    use_kernels=use_kernels, offsets=offsets)
+    x = L.norm_apply(cfg, params["final_norm"], x[:, -1:])
     head = params["embed"] if cfg.tie_embeddings else params["head"]
     logits = x @ head.astype(dtype).T
     return logits, new_cache

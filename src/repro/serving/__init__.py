@@ -1,3 +1,6 @@
-from repro.serving.engine import generate, make_serve_step, prefill
+from repro.serving.engine import (generate, make_serve_step,
+                                  mask_padded_vocab, prefill, prefill_fused,
+                                  sample_tokens)
 
-__all__ = ["generate", "make_serve_step", "prefill"]
+__all__ = ["generate", "make_serve_step", "mask_padded_vocab", "prefill",
+           "prefill_fused", "sample_tokens"]

@@ -1,8 +1,22 @@
-"""Batched serving: KV-cache decode loop over the assigned decoder models.
+"""Batched serving: fused prefill + KV-cache decode loop over the assigned
+decoder models.
 
-``serve_step`` — ONE new token against a seq_len-deep cache — is the unit the
-decode dry-run shapes (decode_32k / long_500k) lower. ``generate`` drives it
-for real batched requests (greedy or temperature sampling).
+``serve_step`` — ONE new token against a seq_len-deep cache — is the unit
+the decode dry-run shapes (decode_32k / long_500k) lower. ``generate``
+drives it for real batched requests (greedy or temperature/top-k sampling):
+
+- **prefill** runs as ONE fused full-sequence forward
+  (:func:`repro.models.transformer.prefill_forward`) that scatters every
+  layer's K/V (and SSM state) into the cache and keeps only the
+  last-position logits — the token-at-a-time ``prefill`` loop remains as
+  the cross-checking fallback;
+- **decode** with ``use_kernels=True`` routes cache attention through the
+  Pallas flash-decode kernel (:func:`repro.kernels.ops.flash_decode`) over
+  a head-major cache;
+- ragged prompts are LEFT-padded (real tokens right-aligned) with
+  ``prompt_lens`` — an attention-validity mask and per-row RoPE offsets
+  thread through the decode path so results match each sequence generated
+  unpadded.
 """
 from __future__ import annotations
 
@@ -17,17 +31,51 @@ from repro.models import transformer as T
 Params = Any
 
 
-def make_serve_step(cfg: ModelConfig, use_kernels: bool = False) -> Callable:
-    """(params, cache, tokens (B,1), pos) -> (next_tokens (B,1), new_cache)."""
+def mask_padded_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """-inf the padded-vocab tail so no sampler can emit an id >=
+    vocab_size. The ONE shared helper for every logits->token path (a
+    prefill that skipped it used to emit out-of-vocab first tokens when
+    ``padded_vocab != vocab_size``)."""
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, -jnp.inf, logits)
+    return logits
+
+
+def sample_tokens(cfg: ModelConfig, logits: jax.Array, *,
+                  temperature: float = 0.0, top_k: int = 0,
+                  rng: Optional[jax.Array] = None) -> jax.Array:
+    """logits (B, V) -> token ids (B,) int32.
+
+    ``temperature <= 0`` is exact greedy argmax (no rng needed); otherwise
+    categorical over ``logits / temperature``, optionally restricted to the
+    per-row ``top_k`` logits. Padded-vocab ids are masked in all modes.
+    """
+    logits = mask_padded_vocab(cfg, logits.astype(jnp.float32))
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if rng is None:
+        raise ValueError("temperature sampling requires an rng key")
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    return jax.random.categorical(rng, logits / temperature,
+                                  axis=-1).astype(jnp.int32)
+
+
+def make_serve_step(cfg: ModelConfig, use_kernels: bool = False,
+                    temperature: float = 0.0, top_k: int = 0) -> Callable:
+    """(params, cache, tokens (B,1), pos[, rng, offsets])
+    -> (next_tokens (B,1), new_cache)."""
 
     def serve_step(params: Params, cache: Params, tokens: jax.Array,
-                   pos: jax.Array):
+                   pos: jax.Array, rng: Optional[jax.Array] = None,
+                   offsets: Optional[jax.Array] = None):
         logits, cache = T.decode_step(params, cfg, tokens, cache, pos,
-                                      use_kernels=use_kernels)
-        if cfg.padded_vocab != cfg.vocab_size:
-            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
-            logits = jnp.where(pad[None, None, :], -jnp.inf, logits)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                                      use_kernels=use_kernels,
+                                      offsets=offsets)
+        nxt = sample_tokens(cfg, logits[:, -1], temperature=temperature,
+                            top_k=top_k, rng=rng)
         return nxt[:, None], cache
 
     return serve_step
@@ -36,57 +84,120 @@ def make_serve_step(cfg: ModelConfig, use_kernels: bool = False) -> Callable:
 def prefill(params: Params, cfg: ModelConfig, prompts: jax.Array,
             cache: Params, *, use_kernels: bool = False
             ) -> Tuple[jax.Array, Params]:
-    """Feed the prompt through decode steps (token-at-a-time prefill).
+    """Token-at-a-time prefill fallback: feed the prompt through decode
+    steps. Returns (last-position logits (B, V), filled cache).
 
-    Production prefill would run the fused full-sequence forward and scatter
-    K/V into the cache; at demo scale the step loop is adequate and reuses
-    the exact decode path under test.
+    The scan carries ONLY the last-position logits (a previous version
+    stacked the full (P, B, 1, V) logits tensor and then threw away all but
+    the last row — O(P·B·V) wasted memory on long prompts). The fused
+    :func:`prefill_fused` supersedes this path for production; it stays as
+    the independently-coded cross-check the equality tests compare against.
     """
     B, P = prompts.shape
+    dtype = jnp.dtype(cfg.dtype)
 
     def body(carry, t):
-        cache = carry
+        cache, _ = carry
         logits, cache = T.decode_step(params, cfg, prompts[:, t][:, None],
                                       cache, t, use_kernels=use_kernels)
-        return cache, logits
+        return (cache, logits[:, -1]), None
 
-    cache, logits = jax.lax.scan(body, cache, jnp.arange(P))
-    last = logits[-1]                       # (B, 1, V)
-    nxt = jnp.argmax(last[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    return nxt, cache
+    init = (cache, jnp.zeros((B, cfg.padded_vocab), dtype))
+    (cache, last), _ = jax.lax.scan(body, init, jnp.arange(P))
+    return last, cache
+
+
+def prefill_fused(params: Params, cfg: ModelConfig, prompts: jax.Array,
+                  cache: Params, *, offsets: Optional[jax.Array] = None,
+                  use_kernels: bool = False) -> Tuple[jax.Array, Params]:
+    """Fused prefill: one full-sequence forward pass scatters all layers'
+    K/V into the cache. Returns (last-position logits (B, V), filled cache).
+    """
+    logits, cache = T.prefill_forward(params, cfg, prompts, cache,
+                                      use_kernels=use_kernels,
+                                      offsets=offsets)
+    return logits[:, -1], cache
 
 
 def generate(params: Params, cfg: ModelConfig, prompts: jax.Array, *,
              max_new_tokens: int = 32, max_len: Optional[int] = None,
              memory: Optional[jax.Array] = None,
-             use_kernels: bool = False) -> jax.Array:
-    """Greedy generation. prompts: (B, P) -> (B, P + max_new_tokens).
+             use_kernels: bool = False,
+             temperature: float = 0.0, top_k: int = 0,
+             rng: Optional[jax.Array] = None,
+             prompt_lens: Optional[jax.Array] = None,
+             fused_prefill: bool = True) -> jax.Array:
+    """Batched generation. prompts: (B, P) -> (B, P + max_new_tokens).
+
+    ``temperature == 0`` (default) is greedy; ``temperature > 0`` samples
+    from ``softmax(logits / temperature)`` (optionally top-k-truncated) and
+    requires ``rng``. ``prompt_lens`` (B,) marks LEFT-padded ragged
+    prompts: row b's real tokens occupy the last ``prompt_lens[b]`` columns
+    and the left padding is masked out of every attention, so each row's
+    continuation equals its unpadded run. ``use_kernels=True`` uses the
+    fused flash prefill + flash-decode Pallas kernels over a head-major
+    cache.
 
     ``max_len`` (when given) is the cache depth and must cover the prompt
     plus every new token — a shallower cache would silently write decode
-    steps past the cache depth and corrupt it, so it raises instead.
+    steps past the cache depth and corrupt it, so it raises instead
+    (``max_len=0`` is a zero-depth cache, not "use the default", and
+    raises too).
     """
     B, P = prompts.shape
-    total = max_len or (P + max_new_tokens)
-    if total < P + max_new_tokens:
-        raise ValueError(
-            f"max_len={total} is shallower than prompt ({P}) + "
-            f"max_new_tokens ({max_new_tokens}) = {P + max_new_tokens}; "
-            f"decode steps would write past the cache depth")
+    if max_len is not None:
+        total = max_len
+        if total < P + max_new_tokens:
+            raise ValueError(
+                f"max_len={total} is shallower than prompt ({P}) + "
+                f"max_new_tokens ({max_new_tokens}) = {P + max_new_tokens}; "
+                f"decode steps would write past the cache depth")
+    else:
+        total = P + max_new_tokens
+    if temperature > 0.0 and rng is None:
+        raise ValueError("temperature > 0 requires an rng key")
+    offsets = None
+    if prompt_lens is not None:
+        if not fused_prefill:
+            raise ValueError(
+                "ragged prompts (prompt_lens) require the fused prefill")
+        lens = jnp.asarray(prompt_lens)
+        try:
+            bad = bool(((lens < 1) | (lens > P)).any())
+        except jax.errors.ConcretizationTypeError:
+            bad = False          # traced under jit: caller's responsibility
+        if bad:
+            raise ValueError(
+                f"prompt_lens must be in [1, {P}] (the padded prompt "
+                f"width); got {prompt_lens}")
+        offsets = (P - lens).astype(jnp.int32)
     mem_len = memory.shape[1] if memory is not None else 0
     cache = T.init_cache(cfg, B, total, memory_len=mem_len,
-                         dtype=jnp.dtype(cfg.dtype))
+                         dtype=jnp.dtype(cfg.dtype),
+                         layout="head" if use_kernels else "seq")
     if memory is not None:
         cache = T.build_cross_cache(params, cfg, memory, cache)
-    tok, cache = prefill(params, cfg, prompts, cache,
-                         use_kernels=use_kernels)
-    step = make_serve_step(cfg, use_kernels)
+    if fused_prefill:
+        last, cache = prefill_fused(params, cfg, prompts, cache,
+                                    offsets=offsets, use_kernels=use_kernels)
+    else:
+        last, cache = prefill(params, cfg, prompts, cache,
+                              use_kernels=use_kernels)
+    step = make_serve_step(cfg, use_kernels, temperature, top_k)
+    base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+    tok = sample_tokens(cfg, last, temperature=temperature, top_k=top_k,
+                        rng=jax.random.fold_in(base_rng, 0))[:, None]
 
+    # the prefill already sampled token P, so only N-1 decode steps remain —
+    # the scan emits each step's OUTPUT (emitting the carry would burn one
+    # extra full decode_step whose sampled token is discarded)
     def body(carry, i):
         tok, cache = carry
-        nxt, cache = step(params, cache, tok, P + i)
-        return (nxt, cache), tok[:, 0]
+        nxt, cache = step(params, cache, tok, P + i,
+                          rng=jax.random.fold_in(base_rng, i + 1),
+                          offsets=offsets)
+        return (nxt, cache), nxt[:, 0]
 
     (_, _), toks = jax.lax.scan(body, (tok, cache),
-                                jnp.arange(max_new_tokens))
-    return jnp.concatenate([prompts, toks.T], axis=1)
+                                jnp.arange(max_new_tokens - 1))
+    return jnp.concatenate([prompts, tok, toks.T], axis=1)

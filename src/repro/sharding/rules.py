@@ -184,6 +184,11 @@ def cache_specs(cache: Any, mesh, global_batch: int) -> Any:
             inner = _spec(mesh, core, b_ax, None, "model")
         elif "cross_" in p:           # (B, mem, kv, hd)
             inner = _spec(mesh, core, b_ax, None, "model", None)
+        elif re.search(r"/(kh|vh)$", p):  # head-major k/v: (B, kv, S, hd)
+            if _fits(core[1], mesh, "model"):
+                inner = _spec(mesh, core, b_ax, "model", None, None)
+            else:
+                inner = _spec(mesh, core, b_ax, None, "model", None)
         else:                         # k/v: (B, S, kv, hd)
             if _fits(core[2], mesh, "model"):
                 inner = _spec(mesh, core, b_ax, None, "model", None)

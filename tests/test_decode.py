@@ -1,6 +1,12 @@
 """Decode/serving correctness: step-by-step decode must reproduce the full
 forward logits (dropless MoE), ring caches must window correctly, and
-generate() must be shape-stable."""
+generate() must be shape-stable.
+
+The long-prompt portion of every case rides the FUSED prefill
+(``T.prefill_forward`` — one full-sequence forward that scatters K/V into
+the cache), so the python-level token loop only covers the trailing decode
+steps; the stepwise-vs-fused prefill cross-check lives in
+tests/test_serving.py."""
 import dataclasses
 
 import jax
@@ -13,6 +19,7 @@ from repro.models import transformer as T
 from repro.serving import generate
 
 S = 20
+TAIL = 4          # decode steps taken one-by-one after the fused prefill
 
 
 def _cfg(arch):
@@ -26,6 +33,10 @@ def _cfg(arch):
 
 @pytest.mark.parametrize("arch", list_archs())
 def test_decode_matches_forward(arch):
+    """Fused prefill of the first S-TAIL tokens, then token-at-a-time decode
+    of the tail: every compared position must reproduce the full forward's
+    logits (late positions attend a cache whose entries were written by the
+    fused scatter — prefill/decode agreement is load-bearing here)."""
     cfg = _cfg(arch)
     rng = jax.random.PRNGKey(0)
     params = T.init_params(rng, cfg)
@@ -46,43 +57,52 @@ def test_decode_matches_forward(arch):
                          else 0, dtype=jnp.float32)
     if mem is not None:
         cache = T.build_cross_cache(params, cfg, mem, cache)
-    errs = []
-    for t in range(S):
-        lg, cache = T.decode_step(params, cfg, toks[:, t][:, None], cache,
-                                  jnp.int32(t))
+    P = S - TAIL
+    lg, cache = T.prefill_forward(params, cfg, toks[:, :P], cache)
+    errs = [float(jnp.abs(lg[:, 0] - full[:, P - 1]).max())]
+    step = jax.jit(lambda p_, tk, c, t: T.decode_step(p_, cfg, tk, c, t))
+    for t in range(P, S):
+        lg, cache = step(params, toks[:, t][:, None], cache, jnp.int32(t))
         errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
     assert max(errs) < 5e-4, (arch, max(errs))
 
 
 def test_swa_ring_cache_equals_full_mask():
     """h2o-danube (SWA): ring cache of window slots == full attention with a
-    window mask, even past the wrap-around point."""
+    window mask, even past the wrap-around point. The fused prefill covers
+    the pre-wrap fill AND the wrapped scatter (prompt 24 > ring 16); the
+    stepwise tail crosses more wrap boundaries."""
     cfg = _cfg("h2o-danube-3-4b")          # reduced window = 16
     assert cfg.sliding_window == 16
     rng = jax.random.PRNGKey(0)
     params = T.init_params(rng, cfg)
-    n = 40                                  # > 2x window: exercises the wrap
+    n, P = 40, 24                           # P > window: prefill wraps
     toks = jax.random.randint(jax.random.PRNGKey(1), (1, n), 0,
                               cfg.vocab_size)
     full, _ = T.forward(params, cfg, toks)
     cache = T.init_cache(cfg, 1, n, dtype=jnp.float32)
-    for t in range(n):
-        lg, cache = T.decode_step(params, cfg, toks[:, t][:, None], cache,
-                                  jnp.int32(t))
+    lg, cache = T.prefill_forward(params, cfg, toks[:, :P], cache)
+    assert float(jnp.abs(lg[:, 0] - full[:, P - 1]).max()) < 5e-4
+    step = jax.jit(lambda p_, tk, c, t: T.decode_step(p_, cfg, tk, c, t))
+    for t in range(P, n):
+        lg, cache = step(params, toks[:, t][:, None], cache, jnp.int32(t))
         err = float(jnp.abs(lg[:, 0] - full[:, t]).max())
         assert err < 5e-4, (t, err)
 
 
 def test_generate_rejects_shallow_cache():
     """max_len < prompt + max_new_tokens would silently write decode steps
-    past the cache depth — it must raise instead of corrupting the cache."""
-    import pytest
+    past the cache depth — it must raise instead of corrupting the cache
+    (including the explicit max_len=0 that `max_len or ...` used to
+    swallow)."""
     cfg = _cfg("qwen3-1.7b")
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
                                  cfg.vocab_size)
     with pytest.raises(ValueError, match="cache depth"):
         generate(params, cfg, prompts, max_new_tokens=8, max_len=10)
+    with pytest.raises(ValueError, match="cache depth"):
+        generate(params, cfg, prompts, max_new_tokens=8, max_len=0)
     # exactly-deep cache is fine
     out = generate(params, cfg, prompts, max_new_tokens=4, max_len=10)
     assert out.shape == (2, 10)
