@@ -33,7 +33,7 @@ python -m pytest --collect-only -q >/dev/null
 
 echo "== run =="
 if [[ ${#args[@]} -eq 0 ]]; then
-  batch_a=(tests/test_decode.py tests/test_parallel_2d.py)
+  batch_a=(tests/test_decode.py tests/test_parallel_2d.py tests/test_serving_continuous.py)
   batch_b=()
   for f in tests/test_*.py; do
     case " ${batch_a[*]} " in

@@ -69,12 +69,24 @@ class BatchSchedule:
     grow_factor: float = 5.0         # = 1 / drop_factor of the LR regime
     round_to: int = 1                # keep ghost-batch divisibility
 
+    def __post_init__(self):
+        if self.round_to < 1:
+            raise ValueError(f"round_to must be >= 1, got {self.round_to}")
+        if self.max_batch < self.round_to:
+            raise ValueError(
+                f"max_batch={self.max_batch} < round_to={self.round_to}: "
+                f"no batch size can satisfy both the cap and ghost-batch "
+                f"divisibility")
+
     def batch_at(self, step: int) -> int:
         n = int(step) // self.grow_every
         b = self.base_batch * self.grow_factor ** n
-        b = int(min(b, self.max_batch))
-        b = max(self.round_to, (b // self.round_to) * self.round_to)
-        return min(b, self.max_batch)
+        # round the cap DOWN to round_to first: clamping to a non-multiple
+        # max_batch after rounding used to return an indivisible batch at
+        # the cap, breaking ghost-batch divisibility
+        cap = (self.max_batch // self.round_to) * self.round_to
+        b = int(min(b, cap))
+        return max(self.round_to, (b // self.round_to) * self.round_to)
 
     def phases(self, total_steps: int) -> Sequence[int]:
         """Distinct batch sizes reached within ``total_steps``."""

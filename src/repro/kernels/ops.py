@@ -24,6 +24,8 @@ from repro.kernels.flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
                                            flash_attention_backward_pallas,
                                            flash_attention_pallas)
 from repro.kernels.flash_decode import (flash_decode_blockwise,
+                                        flash_decode_paged_blockwise,
+                                        flash_decode_paged_pallas,
                                         flash_decode_pallas)
 from repro.kernels.gbn import gbn_backward_pallas, gbn_forward_pallas
 from repro.kernels.mamba_scan import (mamba_chunk_backward_pallas,
@@ -108,8 +110,9 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
     """Single-row decode attention against a head-major cache.
 
     Layout adapter for the model code: q (B, 1, H, hd); k, v (B, KV, S, hd)
-    -> (B, 1, H, hd). ``pos``/``offsets`` are dynamic (SMEM scalars in the
-    kernel); ``ring=True`` reads a sliding-window ring buffer of S slots.
+    -> (B, 1, H, hd). ``pos`` is a scalar or a per-row ``(B,)`` vector —
+    both it and ``offsets`` are dynamic (per-row SMEM refs in the kernel);
+    ``ring=True`` reads a sliding-window ring buffer of S slots.
     Forward-only (serving takes no gradients); oracle:
     :func:`repro.kernels.ref.flash_decode_ref`.
 
@@ -130,6 +133,32 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
     else:
         out = flash_decode_pallas(q.reshape(B, H, hd), k, v, pos,
                                   window=window, ring=ring, offsets=offsets)
+    return out.reshape(B, 1, H, hd)
+
+
+def flash_decode_paged(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                       pt: jax.Array, pos: jax.Array, *,
+                       window: Optional[int] = None,
+                       offsets: Optional[jax.Array] = None) -> jax.Array:
+    """Paged-cache decode attention: q (B, 1, H, hd); kp, vp
+    (n_pages, KV, page_size, hd) physical page pool; pt (B, n_blocks)
+    int32 block tables -> (B, 1, H, hd).
+
+    On TPU the Pallas kernel gathers pages via scalar-prefetch index maps;
+    elsewhere the blockwise ``lax.scan`` gathers one page per row per step
+    (:func:`repro.kernels.flash_decode.flash_decode_paged_blockwise`).
+    Neither materialises a row's cache contiguously. Forward-only; oracle:
+    :func:`repro.kernels.ref.flash_decode_paged_ref`.
+    """
+    B, T, H, hd = q.shape
+    assert T == 1, q.shape
+    if _interpret():
+        out = flash_decode_paged_blockwise(q.reshape(B, H, hd), kp, vp, pt,
+                                           pos, window=window,
+                                           offsets=offsets)
+    else:
+        out = flash_decode_paged_pallas(q.reshape(B, H, hd), kp, vp, pt,
+                                        pos, window=window, offsets=offsets)
     return out.reshape(B, 1, H, hd)
 
 

@@ -99,6 +99,7 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     """Single-row decode attention vs a cache. q: (B, H, hd); k, v:
     (B, KV, S, hd). Returns (B, H, hd).
 
+    ``pos`` is a scalar or a per-row ``(B,)`` vector of query positions.
     Slot ``s`` holds global position ``s`` (``ring=False``) or
     ``pos - ((pos - s) mod S)`` (ring buffer of S slots). A slot with global
     position g is visible iff ``0 <= g <= pos``, ``g > pos - window`` (when
@@ -110,18 +111,38 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     qg = q.astype(jnp.float32).reshape(B, KV, g, hd)
     logits = jnp.einsum("bkgd,bksd->bkgs", qg,
                         k.astype(jnp.float32)) / math.sqrt(hd)
-    slot = jnp.arange(S)
-    gpos = pos - jnp.mod(pos - slot, S) if ring else slot
-    valid = (gpos >= 0) & (gpos <= pos)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                            (B,))[:, None]                     # (B, 1)
+    slot = jnp.arange(S)[None, :]                              # (1, S)
+    gpos = posb - jnp.mod(posb - slot, S) if ring \
+        else jnp.broadcast_to(slot, (B, S))
+    valid = (gpos >= 0) & (gpos <= posb)                       # (B, S)
     if window is not None:
-        valid &= gpos > pos - window
-    valid = jnp.broadcast_to(valid[None], (B, S))
+        valid &= gpos > posb - window
     if offsets is not None:
-        valid &= gpos[None] >= offsets[:, None]
+        valid &= gpos >= offsets[:, None]
     logits = jnp.where(valid[:, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def flash_decode_paged_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                           pt: jax.Array, pos: jax.Array, *,
+                           window: Optional[int] = None,
+                           offsets: Optional[jax.Array] = None) -> jax.Array:
+    """Paged-cache decode oracle: gather each row's pages into a contiguous
+    (B, KV, n_blocks*page_size, hd) cache and defer to
+    :func:`flash_decode_ref` — the thing the paged kernel exists to avoid
+    doing, which is exactly what makes it the oracle. kp, vp:
+    (n_pages, KV, page_size, hd); pt: (B, n_blocks)."""
+    B = q.shape[0]
+    KV, ps, hd = kp.shape[1], kp.shape[2], kp.shape[3]
+    NB = pt.shape[1]
+    k = kp[pt].transpose(0, 2, 1, 3, 4).reshape(B, KV, NB * ps, hd)
+    v = vp[pt].transpose(0, 2, 1, 3, 4).reshape(B, KV, NB * ps, hd)
+    return flash_decode_ref(q, k, v, pos, window=window, ring=False,
+                            offsets=offsets)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,12 @@ Usage:
 Reports cold (incl. compile) and warm (post-compile) tok/s; ``--use-kernels``
 routes prefill through the fused flash-attention forward and decode through
 the flash-decode Pallas kernel over a head-major cache.
+
+``--continuous`` instead drives the continuous-batching engine
+(:class:`repro.serving.ContinuousEngine`) under a synthetic Poisson arrival
+trace (``--rate`` requests per decode step, ``--requests`` total) with a
+paged KV cache (``--page-size``, ``--slots``), and reports sustained tok/s
+plus the static lockstep baseline over the same trace at equal cache memory.
 """
 from __future__ import annotations
 
@@ -21,7 +27,42 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config
 from repro.models import transformer as T
-from repro.serving import generate
+from repro.serving import (ContinuousEngine, generate, poisson_trace,
+                           run_static_trace)
+
+
+def _run_continuous(params, cfg, args) -> None:
+    max_len = args.max_len or 4 * args.prompt_len
+    max_len = -(-max_len // args.page_size) * args.page_size
+    reqs = poisson_trace(
+        cfg, args.requests, rate=args.rate, seed=args.seed,
+        prompt_len_choices=(args.prompt_len // 2, args.prompt_len),
+        new_token_choices=(args.max_new // 2, args.max_new))
+    n_blocks = max_len // args.page_size
+    eng = ContinuousEngine(
+        params, cfg, num_slots=args.slots, max_len=max_len, layout="paged",
+        page_size=args.page_size, total_pages=1 + args.slots * n_blocks,
+        use_kernels=args.use_kernels, eos_id=args.eos_id,
+        temperature=args.temperature, top_k=args.top_k,
+        rng=jax.random.PRNGKey(args.seed + 1))
+    eng.run(reqs)                      # warm the compile caches
+    t0 = time.time()
+    comps = eng.run(reqs)
+    useful = sum(len(c.tokens) for c in comps.values())
+    cont = time.time() - t0
+    # static lockstep baseline: same trace, equal cache memory (slots x
+    # max_len contiguous rows == the paged pool above)
+    run_static_trace(params, cfg, reqs, batch=args.slots, max_len=max_len,
+                     use_kernels=args.use_kernels)   # warm
+    t0 = time.time()
+    static_useful = run_static_trace(params, cfg, reqs, batch=args.slots,
+                                     max_len=max_len,
+                                     use_kernels=args.use_kernels)
+    stat = time.time() - t0
+    print(f"continuous: {useful} tok in {cont:.2f}s "
+          f"({useful / cont:.1f} tok/s, {eng.steps} decode steps)")
+    print(f"static:     {static_useful} tok in {stat:.2f}s "
+          f"({static_useful / stat:.1f} tok/s)")
 
 
 def main() -> None:
@@ -40,12 +81,30 @@ def main() -> None:
     ap.add_argument("--prompt-lens", default="",
                     help="comma-separated per-sequence prompt lengths "
                          "(<= --prompt-len); prompts are left-padded ragged")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine under a Poisson trace "
+                         "(paged KV cache) vs the static baseline")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="--continuous: arrivals per decode step")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--continuous: total requests in the trace")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="--continuous: decode slots (= static batch)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--continuous: KV cache page size (slots/page)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="--continuous: cache depth (0 = 4x prompt-len)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="--continuous: retire rows on this token id")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
     rng = jax.random.PRNGKey(args.seed)
     params = T.init_params(rng, cfg)
+    if args.continuous:
+        _run_continuous(params, cfg, args)
+        return
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

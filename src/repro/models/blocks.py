@@ -71,15 +71,18 @@ def block_init(rng, cfg: ModelConfig, spec: LayerSpec, dtype=jnp.float32
 
 def block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
                 memory_len: int = 0, dtype=jnp.bfloat16,
-                layout: str = "seq") -> Params:
+                layout: str = "seq", page_size: int = 64,
+                total_pages: Optional[int] = None) -> Params:
     """Decode-time cache for one block. ``layout`` picks the KV cache
-    layout: "seq" (B, S, kv, hd) or "head" (B, kv, S, hd) — the
-    flash-decode kernel's native layout (see ``layers.init_kv_cache``)."""
+    layout: "seq" (B, S, kv, hd), "head" (B, kv, S, hd) — the flash-decode
+    kernel's native layout — or "paged" (page pool + per-row block tables;
+    SWA layers keep their head-major ring). See ``layers.init_kv_cache``."""
     c: Params = {}
     if spec.mixer in ("attn", "swa"):
         window = cfg.sliding_window if spec.mixer == "swa" else None
         c["attn"] = L.init_kv_cache(cfg, batch, max_len, window, dtype,
-                                    layout=layout)
+                                    layout=layout, page_size=page_size,
+                                    total_pages=total_pages)
     elif spec.mixer == "ssm":
         c["ssm"] = SSM.init_ssm_cache(cfg, batch)
     if spec.cross_attn:
@@ -198,10 +201,12 @@ def stack_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 
 def stack_cache(cfg: ModelConfig, batch: int, max_len: int,
                 memory_len: int = 0, dtype=jnp.bfloat16,
-                layout: str = "seq") -> Params:
+                layout: str = "seq", page_size: int = 64,
+                total_pages: Optional[int] = None) -> Params:
     def one(spec):
         return block_cache(cfg, spec, batch, max_len, memory_len, dtype,
-                           layout)
+                           layout, page_size=page_size,
+                           total_pages=total_pages)
 
     def stacked(spec):
         c = one(spec)

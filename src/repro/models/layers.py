@@ -282,7 +282,8 @@ def attention_full(params: Params, cfg: ModelConfig, x: jax.Array,
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   window: Optional[int] = None, dtype=jnp.bfloat16,
-                  layout: str = "seq") -> Params:
+                  layout: str = "seq", page_size: int = 64,
+                  total_pages: Optional[int] = None) -> Params:
     """KV cache for one attention layer. SWA layers use a ring buffer of
     ``window`` slots; full layers allocate ``max_len``.
 
@@ -290,11 +291,29 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     decode path and the sharding rules expect. ``layout="head"`` stores
     (B, kv, S, hd) under keys ``kh``/``vh`` — the flash-decode kernel's
     native layout (the sequence axis lands on the sublane axis of its KV
-    blocks). The key names carry the layout, so every consumer can
-    self-describe instead of threading a flag."""
+    blocks). ``layout="paged"`` stores a physical page pool ``kp``/``vp``
+    (total_pages, kv, page_size, hd) plus per-row int32 block tables ``pt``
+    (batch, ceil(max_len / page_size)) mapping logical block i to a
+    physical page — the continuous-batching layout where rows reserve
+    pages as they grow instead of worst-case contiguous memory. Physical
+    page 0 is RESERVED as the trash page: unallocated / retired table
+    entries point at it, so stray writes land somewhere harmless and the
+    kernel's gather never reads out of bounds. SWA layers under "paged"
+    fall back to the head-major ring (a window-bounded ring is already its
+    own worst case — paging it buys nothing). The key names carry the
+    layout, so every consumer can self-describe instead of threading a
+    flag."""
     S = min(max_len, window) if window is not None else max_len
     kv, hd = cfg.n_kv_heads, cfg.head_dim
-    if layout == "head":
+    if layout == "paged" and window is None:
+        nb = -(-max_len // page_size)
+        pages = total_pages if total_pages is not None else 1 + batch * nb
+        return {
+            "kp": jnp.zeros((pages, kv, page_size, hd), dtype=dtype),
+            "vp": jnp.zeros((pages, kv, page_size, hd), dtype=dtype),
+            "pt": jnp.zeros((batch, nb), dtype=jnp.int32),
+        }
+    if layout in ("head", "paged"):
         return {
             "kh": jnp.zeros((batch, kv, S, hd), dtype=dtype),
             "vh": jnp.zeros((batch, kv, S, hd), dtype=dtype),
@@ -318,17 +337,21 @@ def _cache_valid_mask(pos, S: int, *, ring: bool,
 
     Delegates to the SAME ``_slot_visibility`` predicate the flash-decode
     kernel and its blockwise lowering use, so the kernel and non-kernel
-    decode masks cannot drift. Slot ``s`` holds global position ``s`` (full
-    cache) or ``pos - ((pos - s) mod S)`` (ring buffer); window membership
-    is implied by the ring depth (S = min(max_len, window)). ``offsets``
-    adds the per-sequence left-pad bound for ragged prompts (returns (B, S)
-    in that case)."""
+    decode masks cannot drift. ``pos`` is a scalar or a per-row (B,)
+    vector. Slot ``s`` holds global position ``s`` (full cache) or
+    ``pos - ((pos - s) mod S)`` (ring buffer); window membership is
+    implied by the ring depth (S = min(max_len, window)). ``offsets`` adds
+    the per-sequence left-pad bound for ragged prompts. Returns (S,) only
+    for scalar ``pos`` with no offsets, (B, S) otherwise."""
     from repro.kernels.flash_decode import _slot_visibility
-    idx = jnp.arange(S)
-    if offsets is None:
-        return _slot_visibility(idx, pos, seq_k=S, window=None, ring=ring)
-    return _slot_visibility(idx[None, :], pos, seq_k=S, window=None,
-                            ring=ring, offset=offsets[:, None])
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim:
+        pos = pos.reshape(-1, 1)                            # (B, 1)
+    idx = jnp.arange(S) if (pos.ndim == 0 and offsets is None) \
+        else jnp.arange(S)[None, :]
+    return _slot_visibility(
+        idx, pos, seq_k=S, window=None, ring=ring,
+        offset=None if offsets is None else offsets[:, None])
 
 
 def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
@@ -336,44 +359,92 @@ def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
                      window: Optional[int] = None,
                      offsets: Optional[jax.Array] = None,
                      use_kernels: bool = False) -> Tuple[jax.Array, Params]:
-    """One-token decode. x: (B, 1, D); pos: scalar int32 (current index).
+    """One-token decode. x: (B, 1, D); pos: scalar int32 (every row at the
+    same index) or per-row (B,) int32 (continuous batching).
 
     ``offsets`` (B,) int32: per-sequence left-pad widths for ragged
     prompts — RoPE positions become ``pos - offsets[b]`` and cache slots
     before each sequence's first real token are masked.
     ``use_kernels=True`` routes the cache attention through the Pallas
-    flash-decode kernel (native on a head-major cache; a seq-major cache is
-    transposed on the fly — correct but not the fast path).
+    flash-decode kernel (native on a head-major or paged cache; a
+    seq-major cache is transposed on the fly — correct but not the fast
+    path). A paged cache (``kp``/``vp``/``pt``, see ``init_kv_cache``)
+    writes this token's K/V into the page holding slot ``pos`` via the
+    row's block table and attends by gather — a retired row whose table
+    was zeroed writes harmlessly into the reserved trash page 0.
 
     Returns (y (B,1,D), new_cache).
     """
     B = x.shape[0]
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    vector_pos = pos.ndim > 0
+    posb = jnp.broadcast_to(pos.reshape(-1), (B,))
     if offsets is None:
-        positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+        positions = posb[:, None]
     else:
-        positions = (pos - offsets)[:, None].astype(jnp.int32)
+        positions = (posb - offsets)[:, None].astype(jnp.int32)
     q, k, v = _project_qkv(params, cfg, x, positions)
+
+    if "pt" in cache:                  # paged pool + per-row block tables
+        from repro.kernels import ops as kops
+        from repro.kernels.flash_decode import _slot_visibility
+        kp, vp, pt = cache["kp"], cache["vp"], cache["pt"]
+        ps, NB = kp.shape[2], pt.shape[1]
+        b_idx = jnp.arange(B)
+        page = pt[b_idx, jnp.clip(posb // ps, 0, NB - 1)]   # (B,)
+        kp = kp.at[page, :, posb % ps].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[page, :, posb % ps].set(v[:, 0].astype(vp.dtype))
+        new_cache = {"kp": kp, "vp": vp, "pt": pt}
+        if use_kernels:
+            out = kops.flash_decode_paged(
+                q, kp.astype(q.dtype), vp.astype(q.dtype), pt, posb,
+                window=window, offsets=offsets)
+        else:
+            S = NB * ps
+            kg = kp[pt].transpose(0, 2, 1, 3, 4).reshape(B, kv, S, hd)
+            vg = vp[pt].transpose(0, 2, 1, 3, 4).reshape(B, kv, S, hd)
+            m = _slot_visibility(
+                jnp.arange(S)[None, :], posb[:, None], seq_k=S,
+                window=window, ring=False,
+                offset=None if offsets is None else offsets[:, None])
+            out = _sdpa_grouped(q, kg.swapaxes(1, 2).astype(q.dtype),
+                                vg.swapaxes(1, 2).astype(q.dtype),
+                                m[:, None, :])
+        y = out.reshape(B, 1, h * hd) @ params["wo"].astype(x.dtype)
+        return y, new_cache
+
     ck, cv, head_major = _cache_kv(cache)
     seq_ax = 2 if head_major else 1
     S = ck.shape[seq_ax]
-    slot = pos % S if window is not None else pos
-    start = (0, 0, slot, 0) if head_major else (0, slot, 0, 0)
-    kw = k.swapaxes(1, 2) if head_major else k
-    vw = v.swapaxes(1, 2) if head_major else v
-    ck = jax.lax.dynamic_update_slice(ck, kw.astype(ck.dtype), start)
-    cv = jax.lax.dynamic_update_slice(cv, vw.astype(cv.dtype), start)
+    if vector_pos:
+        slot_b = posb % S if window is not None else posb
+        b_idx = jnp.arange(B)
+        if head_major:
+            ck = ck.at[b_idx, :, slot_b].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[b_idx, :, slot_b].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = ck.at[b_idx, slot_b].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[b_idx, slot_b].set(v[:, 0].astype(cv.dtype))
+    else:
+        slot = pos % S if window is not None else pos
+        start = (0, 0, slot, 0) if head_major else (0, slot, 0, 0)
+        kw = k.swapaxes(1, 2) if head_major else k
+        vw = v.swapaxes(1, 2) if head_major else v
+        ck = jax.lax.dynamic_update_slice(ck, kw.astype(ck.dtype), start)
+        cv = jax.lax.dynamic_update_slice(cv, vw.astype(cv.dtype), start)
     new_cache = {"kh": ck, "vh": cv} if head_major else {"k": ck, "v": cv}
     ring = window is not None
+    kernel_pos = posb if vector_pos else pos
     if use_kernels:
         from repro.kernels import ops as kops
         khm = ck if head_major else ck.swapaxes(1, 2)
         vhm = cv if head_major else cv.swapaxes(1, 2)
         out = kops.flash_decode(q, khm.astype(q.dtype), vhm.astype(q.dtype),
-                                pos, window=window, ring=ring,
+                                kernel_pos, window=window, ring=ring,
                                 offsets=offsets)
     else:
-        valid = _cache_valid_mask(pos, S, ring=ring, offsets=offsets)
+        valid = _cache_valid_mask(kernel_pos, S, ring=ring, offsets=offsets)
         m = jnp.broadcast_to(valid[None, None, :] if valid.ndim == 1
                              else valid[:, None, :], (B, 1, S))
         ks = ck.swapaxes(1, 2) if head_major else ck

@@ -136,12 +136,17 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                memory_len: int = 0, dtype=jnp.bfloat16,
-               layout: str = "seq") -> Params:
+               layout: str = "seq", page_size: int = 64,
+               total_pages: Optional[int] = None) -> Params:
     """``layout="head"`` builds the flash-decode kernel's native head-major
     KV caches (serving ``use_kernels=True``); "seq" is the classic
     (B, S, kv, hd) layout the grouped-einsum decode and sharding rules
-    expect."""
-    return B.stack_cache(cfg, batch, max_len, memory_len, dtype, layout)
+    expect; "paged" gives full-attention layers a physical page pool +
+    per-row block tables (``page_size`` slots per page, ``total_pages``
+    including the reserved trash page 0) for the continuous-batching
+    engine — SWA ring and SSM/cross caches are unchanged by it."""
+    return B.stack_cache(cfg, batch, max_len, memory_len, dtype, layout,
+                         page_size=page_size, total_pages=total_pages)
 
 
 def memory_len(cfg: ModelConfig, seq_len: int) -> int:
@@ -186,7 +191,8 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
                 use_kernels: bool = False,
                 offsets: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Params]:
-    """tokens: (B, 1) int32; pos: scalar int32 -> (logits (B,1,V), new cache).
+    """tokens: (B, 1) int32; pos: scalar int32 (lockstep batch) or per-row
+    (B,) int32 (continuous batching) -> (logits (B,1,V), new cache).
 
     ``use_kernels=True`` routes cache attention through the Pallas
     flash-decode kernel. ``offsets`` (B,) are per-sequence left-pad widths

@@ -1,6 +1,9 @@
-from repro.serving.engine import (generate, make_serve_step,
-                                  mask_padded_vocab, prefill, prefill_fused,
+from repro.serving.engine import (Completion, ContinuousEngine, Request,
+                                  generate, make_serve_step,
+                                  mask_padded_vocab, poisson_trace, prefill,
+                                  prefill_fused, run_static_trace,
                                   sample_tokens)
 
-__all__ = ["generate", "make_serve_step", "mask_padded_vocab", "prefill",
-           "prefill_fused", "sample_tokens"]
+__all__ = ["Completion", "ContinuousEngine", "Request", "generate",
+           "make_serve_step", "mask_padded_vocab", "poisson_trace",
+           "prefill", "prefill_fused", "run_static_trace", "sample_tokens"]

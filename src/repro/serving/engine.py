@@ -20,10 +20,12 @@ drives it for real batched requests (greedy or temperature/top-k sampling):
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
@@ -57,7 +59,12 @@ def sample_tokens(cfg: ModelConfig, logits: jax.Array, *,
     if rng is None:
         raise ValueError("temperature sampling requires an rng key")
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        # clamp to the REAL vocab: a top_k past vocab_size used to fall
+        # into clamped negative indexing on the sorted logits, silently
+        # truncating to a much smaller k (the padded tail is all -inf, so
+        # k >= vocab_size must mean "no truncation")
+        k_eff = min(top_k, cfg.vocab_size)
+        kth = jnp.sort(logits, axis=-1)[..., -k_eff][..., None]
         logits = jnp.where(logits >= kth, logits, -jnp.inf)
     return jax.random.categorical(rng, logits / temperature,
                                   axis=-1).astype(jnp.int32)
@@ -171,6 +178,10 @@ def generate(params: Params, cfg: ModelConfig, prompts: jax.Array, *,
                 f"prompt_lens must be in [1, {P}] (the padded prompt "
                 f"width); got {prompt_lens}")
         offsets = (P - lens).astype(jnp.int32)
+    if max_new_tokens == 0:
+        # zero new tokens means the prompts unchanged — the prefill-sampled
+        # token used to be concatenated unconditionally, returning (B, P+1)
+        return prompts
     mem_len = memory.shape[1] if memory is not None else 0
     cache = T.init_cache(cfg, B, total, memory_len=mem_len,
                          dtype=jnp.dtype(cfg.dtype),
@@ -201,3 +212,442 @@ def generate(params: Params, cfg: ModelConfig, prompts: jax.Array, *,
     (_, _), toks = jax.lax.scan(body, (tok, cache),
                                 jnp.arange(max_new_tokens - 1))
     return jnp.concatenate([prompts, tok, toks.T], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``arrival`` is in decode-step units (the
+    engine's simulated clock): the request becomes visible to the scheduler
+    once that many decode steps have executed."""
+    id: int
+    prompt: Any                     # (L,) int token ids (list / np / jnp)
+    max_new_tokens: int
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    """Finished request: the generated continuation (prompt excluded) and
+    the decode-step clock at which the row retired."""
+    id: int
+    tokens: list
+    finished_at: float
+
+
+def _tree_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _is_stacked(p: str) -> bool:
+    return "body" in p.split("/")
+
+
+def _scatter_admit(cache: Params, tmp: Params, slot: jax.Array,
+                   pages: jax.Array) -> Params:
+    """Scatter a freshly prefilled batch-1 contiguous cache ``tmp`` into
+    row ``slot`` of the serving cache.
+
+    Contiguous leaves (kh/vh ring buffers, seq k/v, SSM h/conv) are a row
+    copy. Paged leaves gather the temp cache's full-depth kh/vh into
+    page-sized blocks and scatter them at ``pages`` (the row's freshly
+    assigned block table, trash page 0 for blocks past the prompt — those
+    slots are masked until decode writes them); ``pt`` rows are set to
+    ``pages``. Stacked body leaves carry a leading repeats dim.
+    """
+    tmp_flat = {
+        _tree_path_str(path): leaf
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tmp)[0]}
+
+    def upd(path, leaf):
+        p = _tree_path_str(path)
+        stacked = _is_stacked(p)
+        if p.endswith("/pt"):
+            return (leaf.at[:, slot].set(pages) if stacked
+                    else leaf.at[slot].set(pages))
+        if p.endswith("/kp") or p.endswith("/vp"):
+            src = tmp_flat[p[:-2] + ("kh" if p.endswith("/kp") else "vh")]
+            ps = leaf.shape[-2]
+            if stacked:
+                t = src[:, 0]                         # (R, kv, S, hd)
+                R, kv, S, hd = t.shape
+                blocks = t.reshape(R, kv, S // ps, ps, hd).swapaxes(1, 2)
+                return leaf.at[:, pages].set(blocks.astype(leaf.dtype))
+            t = src[0]                                # (kv, S, hd)
+            kv, S, hd = t.shape
+            blocks = t.reshape(kv, S // ps, ps, hd).swapaxes(0, 1)
+            return leaf.at[pages].set(blocks.astype(leaf.dtype))
+        src = tmp_flat[p]
+        if stacked:
+            return leaf.at[:, slot].set(src[:, 0].astype(leaf.dtype))
+        return leaf.at[slot].set(src[0].astype(leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(upd, cache)
+
+
+def _write_pt(cache: Params, pt: jax.Array) -> Params:
+    """Overwrite every layer's block table with ``pt`` (num_slots, NB) —
+    the engine keeps ONE logical table shared by all layers (each layer
+    has its own page pool, addressed by the same page ids)."""
+    def upd(path, leaf):
+        p = _tree_path_str(path)
+        if p.endswith("/pt"):
+            return jnp.broadcast_to(pt, leaf.shape).astype(leaf.dtype)
+        return leaf
+    return jax.tree_util.tree_map_with_path(upd, cache)
+
+
+class ContinuousEngine:
+    """Continuous-batching scheduler over a fixed pool of decode slots.
+
+    The static engine (:func:`generate`) decodes one batch in lockstep: a
+    single long request holds every freed slot hostage until the whole
+    batch drains. Here each row advances at its OWN position (the per-row
+    ``pos`` vector threads through :func:`repro.models.transformer.
+    decode_step` into the flash-decode kernels), a row that emits EOS or
+    reaches its token budget RETIRES immediately, and the freed slot is
+    refilled mid-flight by prefilling the next queued request into just
+    that row (:func:`prefill_fused` on a batch-1 temp cache, scattered in
+    by :func:`_scatter_admit`).
+
+    ``layout="paged"`` backs full-attention layers with a physical page
+    pool + per-row block tables (see ``layers.init_kv_cache``): pages are
+    allocated from a host-side free list as rows grow and returned on
+    retirement, so cache memory is bounded by TOTAL in-flight tokens, not
+    num_slots x worst-case length. A retired row's table is zeroed — its
+    (dead) decode writes land on the reserved trash page 0, which every
+    visibility mask excludes, so survivors are bit-exact vs running each
+    request alone (the equality tests assert exactly that).
+
+    Host/device split: ``pos``/``active``/block tables/the arrival queue
+    live host-side (numpy); the decode step is ONE jitted call per token
+    over all slots with the cache donated. Retired rows keep stepping (a
+    dead row's lane costs nothing extra in the fixed-shape batch) but
+    their ``pos`` is frozen and their output discarded. Compiles are
+    bounded: one decode step, one pt-write, plus one admission prefill per
+    DISTINCT prompt length.
+    """
+
+    def __init__(self, params: Params, cfg: ModelConfig, *,
+                 num_slots: int, max_len: int, layout: str = "paged",
+                 page_size: int = 16, total_pages: Optional[int] = None,
+                 use_kernels: bool = False, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 rng: Optional[jax.Array] = None):
+        if any(s.cross_attn for s in (tuple(cfg.head_pattern)
+                                      + tuple(cfg.body_pattern)
+                                      + tuple(cfg.tail_pattern))):
+            raise ValueError("ContinuousEngine serves decoder-only models "
+                             "(no cross-attention memory)")
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.layout = layout
+        self.use_kernels = use_kernels
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.top_k = top_k
+        self.dtype = jnp.dtype(cfg.dtype)
+        self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.paged = layout == "paged"
+        if self.paged:
+            if max_len % page_size != 0:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of "
+                    f"page_size={page_size}")
+            self.page_size = page_size
+            self.n_blocks = max_len // page_size
+            default_pages = 1 + num_slots * self.n_blocks
+            self.total_pages = (total_pages if total_pages is not None
+                                else default_pages)
+            if self.total_pages < 1 + self.n_blocks:
+                raise ValueError(
+                    f"total_pages={self.total_pages} cannot hold even one "
+                    f"full-length row (+ trash page)")
+        else:
+            self.page_size = self.n_blocks = self.total_pages = 0
+        self._step_fn = jax.jit(
+            make_serve_step(cfg, use_kernels, temperature, top_k),
+            donate_argnums=(1,))
+        self._write_pt_fn = jax.jit(_write_pt, donate_argnums=(0,))
+        self._admit_fns: Dict[int, Callable] = {}
+        self.reset()
+
+    # -- state ---------------------------------------------------------------
+
+    def reset(self) -> None:
+        cfg, n = self.cfg, self.num_slots
+        self.cache = T.init_cache(
+            cfg, n, self.max_len, dtype=self.dtype, layout=self.layout,
+            page_size=self.page_size or 64,
+            total_pages=self.total_pages or None)
+        self.pos = np.zeros((n,), np.int32)
+        self.active = np.zeros((n,), bool)
+        self._last = jnp.zeros((n, 1), jnp.int32)
+        self.slot_req: list = [None] * n
+        if self.paged:
+            self.pt_host = np.zeros((n, self.n_blocks), np.int32)
+            self.free_pages = list(range(self.total_pages - 1, 0, -1))
+        self.queue: list = []         # admitted-able requests, FIFO
+        self.pending: list = []       # future arrivals (sorted, popped front)
+        self.completions: Dict[int, Completion] = {}
+        self._generated: Dict[int, list] = {}
+        self.clock = 0.0              # decode steps executed
+        self.steps = 0
+        self.tokens_out = 0
+        self._rng_i = 0
+
+    # -- scheduling ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        L = int(jnp.asarray(req.prompt).shape[0])
+        if L < 1 or L + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.id}: prompt ({L}) + max_new_tokens "
+                f"({req.max_new_tokens}) must fit max_len={self.max_len}")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.id}: max_new_tokens must be >= 1")
+        self.queue.append(req)
+
+    def _next_rng(self) -> jax.Array:
+        self._rng_i += 1
+        return jax.random.fold_in(self._base_rng, self._rng_i)
+
+    def _pages_for(self, n_needed: int, row: "Any") -> bool:
+        """Allocate physical pages for row blocks [0, n_needed) that are
+        still on the trash page. Returns False if the pool is exhausted."""
+        for i in range(n_needed):
+            if self.pt_host[row, i] == 0:
+                if not self.free_pages:
+                    return False
+                self.pt_host[row, i] = self.free_pages.pop()
+        return True
+
+    def _make_admit(self, L: int) -> Callable:
+        cfg = self.cfg
+        # the temp cache must be head-major wherever the main cache is:
+        # paged pools scatter from head-major blocks, and contiguous
+        # head/seq leaves are copied row-for-row
+        tmp_layout = "head" if (self.paged or self.layout == "head") \
+            else "seq"
+        uk, temp, tk = self.use_kernels, self.temperature, self.top_k
+        max_len, dtype, paged = self.max_len, self.dtype, self.paged
+
+        def admit(params, cache, prompt, slot, pages, rng):
+            tmp = T.init_cache(cfg, 1, max_len, dtype=dtype,
+                               layout=tmp_layout)
+            last, tmp = prefill_fused(params, cfg, prompt[None], tmp,
+                                      use_kernels=uk)
+            tok = sample_tokens(cfg, last, temperature=temp, top_k=tk,
+                                rng=rng)
+            cache = _scatter_admit(cache, tmp, slot, pages)
+            return tok, cache
+
+        if not paged:
+            # pages is unused; close over a dummy so the jit signature is
+            # stable
+            def admit_nopage(params, cache, prompt, slot, rng):
+                return admit(params, cache, prompt, slot,
+                             jnp.zeros((0,), jnp.int32), rng)
+            return jax.jit(admit_nopage, donate_argnums=(1,))
+        return jax.jit(admit, donate_argnums=(1,))
+
+    def _admit(self, req: Request, slot: int) -> bool:
+        prompt = jnp.asarray(req.prompt, jnp.int32)
+        L = int(prompt.shape[0])
+        if self.paged:
+            if not self._pages_for(-(-L // self.page_size), slot):
+                return False               # pool exhausted; stay queued
+        fn = self._admit_fns.get(L)
+        if fn is None:
+            fn = self._admit_fns[L] = self._make_admit(L)
+        rng = self._next_rng()
+        if self.paged:
+            pages = jnp.asarray(self.pt_host[slot], jnp.int32)
+            tok, self.cache = fn(self.params, self.cache, prompt,
+                                 jnp.int32(slot), pages, rng)
+        else:
+            tok, self.cache = fn(self.params, self.cache, prompt,
+                                 jnp.int32(slot), rng)
+        self._last = self._last.at[slot].set(tok)
+        self.pos[slot] = L
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        self._generated[req.id] = []
+        self.tokens_out += 1
+        self._record(slot, int(tok[0]))
+        return True
+
+    def _record(self, slot: int, tok: int) -> None:
+        """Append one generated token to the slot's request; retire on EOS
+        or budget exhaustion."""
+        req = self.slot_req[slot]
+        out = self._generated[req.id]
+        out.append(tok)
+        if ((self.eos_id is not None and tok == self.eos_id)
+                or len(out) >= req.max_new_tokens):
+            self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        self.completions[req.id] = Completion(
+            id=req.id, tokens=list(self._generated.pop(req.id)),
+            finished_at=self.clock)
+        self.active[slot] = False     # pos intentionally frozen
+        self.slot_req[slot] = None
+        if self.paged:
+            row = self.pt_host[slot]
+            self.free_pages.extend(int(p) for p in row[row != 0])
+            self.pt_host[slot] = 0
+            self.cache = self._write_pt_fn(
+                self.cache, jnp.asarray(self.pt_host))
+
+    def _release_arrivals(self) -> None:
+        while self.pending and self.pending[0].arrival <= self.clock:
+            self.queue.append(self.pending.pop(0))
+
+    def _admit_ready(self) -> None:
+        free = [s for s in range(self.num_slots) if not self.active[s]]
+        while free and self.queue:
+            if not self._admit(self.queue[0], free[0]):
+                break                 # page pool exhausted — wait for frees
+            self.queue.pop(0)
+            free.pop(0)
+
+    def _ensure_pages(self) -> None:
+        """Pre-step page allocation: every active row is about to write its
+        K/V at slot ``pos`` — make sure the block holding it is backed."""
+        dirty = False
+        for s in range(self.num_slots):
+            if not self.active[s]:
+                continue
+            blk = int(self.pos[s]) // self.page_size
+            if blk < self.n_blocks and self.pt_host[s, blk] == 0:
+                if not self.free_pages:
+                    raise RuntimeError(
+                        "page pool exhausted mid-decode: total_pages too "
+                        "small for the admitted working set")
+                self.pt_host[s, blk] = self.free_pages.pop()
+                dirty = True
+        if dirty:
+            self.cache = self._write_pt_fn(
+                self.cache, jnp.asarray(self.pt_host))
+
+    # -- the loop ------------------------------------------------------------
+
+    def step(self) -> None:
+        """One decode step over all slots (active rows advance; retired
+        rows write into masked slots / the trash page and are ignored)."""
+        if self.paged:
+            self._ensure_pages()
+        rng = (self._next_rng() if self.temperature > 0 else None)
+        toks, self.cache = self._step_fn(
+            self.params, self.cache, self._last,
+            jnp.asarray(self.pos), rng)
+        self._last = toks
+        host = jax.device_get(toks)[:, 0]
+        was_active = [s for s in range(self.num_slots) if self.active[s]]
+        self.steps += 1
+        self.clock += 1.0
+        for s in was_active:
+            self.pos[s] += 1
+            self.tokens_out += 1
+            self._record(s, int(host[s]))
+
+    def run(self, requests) -> Dict[int, Completion]:
+        """Drive the arrival queue to completion: admit requests as their
+        ``arrival`` clock passes and slots free up, decode until every
+        request has finished. Returns {request id: Completion}."""
+        self.reset()
+        self.pending = sorted(requests, key=lambda r: r.arrival)
+        for r in self.pending:
+            L = int(jnp.asarray(r.prompt).shape[0])
+            if L < 1 or r.max_new_tokens < 1 \
+                    or L + r.max_new_tokens > self.max_len:
+                raise ValueError(f"request {r.id} does not fit max_len="
+                                 f"{self.max_len}")
+        while self.pending or self.queue or self.active.any():
+            self._release_arrivals()
+            self._admit_ready()
+            if not self.active.any():
+                if self.pending:      # idle: jump the clock to next arrival
+                    self.clock = max(self.clock, self.pending[0].arrival)
+                    continue
+                break                 # queue non-empty but nothing admitted
+            self.step()
+        if self.queue:
+            raise RuntimeError(
+                f"{len(self.queue)} requests could never be admitted "
+                f"(prompt longer than any slot's page budget?)")
+        return self.completions
+
+
+def poisson_trace(cfg: ModelConfig, n_requests: int, *, rate: float,
+                  prompt_len_choices=(8, 16, 24),
+                  new_token_choices=(4, 16, 32),
+                  seed: int = 0) -> list:
+    """Synthetic serving trace: request inter-arrival times are
+    exponential(1/rate) in decode-step units (a Poisson process over the
+    engine clock); prompt and output lengths are drawn uniformly from the
+    given choice sets (small sets keep admission-prefill compiles
+    bounded)."""
+    r = np.random.RandomState(seed)
+    t, out = 0.0, []
+    for i in range(n_requests):
+        t += float(r.exponential(1.0 / rate))
+        L = int(r.choice(prompt_len_choices))
+        N = int(r.choice(new_token_choices))
+        prompt = r.randint(0, cfg.vocab_size, size=(L,)).astype("int32")
+        out.append(Request(id=i, prompt=prompt, max_new_tokens=N, arrival=t))
+    return out
+
+
+def run_static_trace(params: Params, cfg: ModelConfig, requests, *,
+                     batch: int, max_len: int,
+                     use_kernels: bool = False) -> int:
+    """Static-batch baseline for the same trace: serve requests in arrival
+    order in fixed lockstep groups of ``batch`` via :func:`generate`.
+
+    Every group is padded to ONE shape — (batch, P_max) prompts (ragged via
+    ``prompt_lens``) decoding N_max steps — so the whole baseline compiles
+    once; that is also its weakness, which the continuous engine exploits:
+    each group runs as long as its LONGEST member while finished rows idle.
+    Returns the number of USEFUL new tokens (each request's own budget;
+    lockstep overshoot is discarded).
+    """
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    P_max = max(int(jnp.asarray(r.prompt).shape[0]) for r in reqs)
+    N_max = max(r.max_new_tokens for r in reqs)
+    assert P_max + N_max <= max_len, (P_max, N_max, max_len)
+    gen = jax.jit(lambda p, toks, lens: generate(
+        p, cfg, toks, max_new_tokens=N_max, max_len=max_len,
+        use_kernels=use_kernels, prompt_lens=lens))
+    useful = 0
+    for g0 in range(0, len(reqs), batch):
+        group = reqs[g0:g0 + batch]
+        while len(group) < batch:     # pad the tail group by repetition
+            group.append(group[-1])
+        prompts = np.zeros((batch, P_max), np.int32)
+        lens = np.zeros((batch,), np.int32)
+        for i, r in enumerate(group):
+            p = np.asarray(r.prompt, np.int32)
+            prompts[i, P_max - len(p):] = p       # LEFT-padded
+            lens[i] = len(p)
+        out = gen(params, jnp.asarray(prompts), jnp.asarray(lens))
+        jax.block_until_ready(out)
+    for r in reqs:
+        useful += r.max_new_tokens
+    return useful

@@ -189,6 +189,17 @@ def cache_specs(cache: Any, mesh, global_batch: int) -> Any:
                 inner = _spec(mesh, core, b_ax, "model", None, None)
             else:
                 inner = _spec(mesh, core, b_ax, None, "model", None)
+        elif re.search(r"/(kp|vp)$", p):  # page pool: (pages, kv, ps, hd)
+            # pages are row-agnostic (any row's block may land on any
+            # page), so the pool cannot shard over the batch axes — shard
+            # kv heads over 'model' when divisible, else replicate (a
+            # seq-sharded page would split the kernel's per-page gather).
+            if _fits(core[1], mesh, "model"):
+                inner = _spec(mesh, core, None, "model", None, None)
+            else:
+                inner = P(*([None] * len(core)))
+        elif p.endswith("/pt"):       # block table: (B, n_blocks) int32
+            inner = _spec(mesh, core, b_ax, None)
         else:                         # k/v: (B, S, kv, hd)
             if _fits(core[2], mesh, "model"):
                 inner = _spec(mesh, core, b_ax, None, "model", None)

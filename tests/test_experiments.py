@@ -160,6 +160,26 @@ def test_batch_schedule_growth_and_rounding():
     assert sched.phases(400) == [32, 160, 800, 1024]
 
 
+def test_batch_schedule_cap_rounds_down():
+    """Regression: a max_batch that is NOT a round_to multiple used to win
+    over rounding at the cap, returning an indivisible batch (e.g. 1000
+    with round_to=16) that breaks ghost-batch splitting. The cap itself is
+    rounded DOWN first."""
+    sched = BatchSchedule(base_batch=32, max_batch=1000, grow_every=100,
+                          grow_factor=5.0, round_to=16)
+    assert sched.batch_at(300) == 992            # not 1000
+    assert all(b % 16 == 0 for b in sched.phases(500))
+
+
+def test_batch_schedule_validates_round_to():
+    with pytest.raises(ValueError, match="round_to"):
+        BatchSchedule(base_batch=32, max_batch=1024, grow_every=100,
+                      round_to=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchSchedule(base_batch=32, max_batch=8, grow_every=100,
+                      round_to=16)
+
+
 def test_batch_size_increase_maps_decay_regime():
     small = Regime(base_lr=0.1, total_steps=300, drop_every=100,
                    drop_factor=0.2)

@@ -13,7 +13,8 @@ from repro.kernels import ref
 from repro.kernels.flash_decode import (flash_decode_blockwise,
                                         flash_decode_pallas)
 from repro.models import transformer as T
-from repro.serving import generate, prefill, prefill_fused
+from repro.serving import (generate, prefill, prefill_fused, sample_tokens,
+                           mask_padded_vocab)
 
 
 def _cfg(arch, **overrides):
@@ -251,6 +252,46 @@ def test_prefill_masks_padded_vocab():
         out = generate(params, cfg, prompts, max_new_tokens=5,
                        fused_prefill=fused)
         assert (out < cfg.vocab_size).all(), f"fused={fused}"
+
+
+@pytest.mark.tier1
+def test_generate_max_new_tokens_zero_and_one():
+    """Regression: ``max_new_tokens=0`` used to run the prefill anyway and
+    concatenate a phantom first token; it must return the prompts
+    unchanged. ``max_new_tokens=1`` must be exactly prefill + greedy
+    argmax of the last-position logits."""
+    cfg = _cfg("qwen3-1.7b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                 cfg.vocab_size)
+    out0 = generate(params, cfg, prompts, max_new_tokens=0)
+    assert out0.shape == prompts.shape
+    np.testing.assert_array_equal(out0, prompts)
+    out1 = generate(params, cfg, prompts, max_new_tokens=1)
+    assert out1.shape == (2, 7)
+    np.testing.assert_array_equal(out1[:, :6], prompts)
+    cache = T.init_cache(cfg, 2, 8, dtype=jnp.float32)
+    last, _ = prefill_fused(params, cfg, prompts, cache)
+    expect = sample_tokens(cfg, last, temperature=0.0, top_k=0, rng=None)
+    np.testing.assert_array_equal(out1[:, 6],
+                                  np.asarray(expect).reshape(-1))
+
+
+@pytest.mark.tier1
+def test_sample_tokens_top_k_at_least_vocab():
+    """Regression: ``top_k >= vocab_size`` used to index the sorted logits
+    at position V - top_k < 0, wrapping around and truncating to an
+    arbitrary cutoff. Clamped, it must equal untruncated sampling and stay
+    in-vocab."""
+    cfg = _cfg("qwen3-1.7b", vocab_size=500)
+    logits = jax.random.normal(jax.random.PRNGKey(0),
+                               (4, 1, cfg.padded_vocab))
+    rng = jax.random.PRNGKey(1)
+    for k in (cfg.vocab_size, cfg.vocab_size + 37, 10_000):
+        got = sample_tokens(cfg, logits, temperature=0.7, top_k=k, rng=rng)
+        want = sample_tokens(cfg, logits, temperature=0.7, top_k=0, rng=rng)
+        np.testing.assert_array_equal(got, want)
+        assert (got < cfg.vocab_size).all()
 
 
 def test_generate_max_len_zero_raises():
