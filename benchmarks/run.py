@@ -1,5 +1,7 @@
 """Benchmark harness — one function per paper table/figure + kernel/system
-micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows, and appends
+each row (with an ISO timestamp) to ``BENCH_<name>.json`` at the repo root —
+one JSON object per line, so the perf trajectory accumulates across runs.
 
 Paper mapping:
 - table1_generalization_gap  -> Table 1 (SB/LB/+LR/+GBN/+RA val accuracy),
@@ -22,6 +24,7 @@ import glob
 import json
 import os
 import time
+from datetime import datetime, timezone
 from typing import Callable, Dict, List
 
 import jax
@@ -29,16 +32,27 @@ import jax.numpy as jnp
 import numpy as np
 
 ROWS: List[str] = []
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+    # accumulate the perf trajectory: one timestamped JSON line per run,
+    # appended so BENCH_<name>.json keeps the full history
+    safe = name.replace("/", "_").replace("[", "_").replace("]", "")
+    rec = {"ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+           "name": name, "us_per_call": round(us_per_call, 1),
+           "derived": derived}
+    with open(os.path.join(REPO_ROOT, f"BENCH_{safe}.json"), "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
 
 
 def _timeit(fn: Callable, *args, reps: int = 5) -> float:
-    fn(*args)                      # compile / warm
+    # fully block the warmup: an async-dispatched compile/first call must
+    # never still be executing when the timer starts
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         r = fn(*args)

@@ -43,9 +43,12 @@ if [[ ${#args[@]} -eq 0 ]]; then
   done
   log_a=$(mktemp) log_b=$(mktemp)
   trap 'rm -f "$log_a" "$log_b"' EXIT
-  python -m pytest -x -q "${batch_a[@]}" >"$log_a" 2>&1 &
+  # repro.obs.trace --label wraps each batch and prints its wall time
+  python -m repro.obs --label "batch A" -- \
+    python -m pytest -x -q "${batch_a[@]}" >"$log_a" 2>&1 &
   pid_a=$!
-  python -m pytest -x -q "${batch_b[@]}" >"$log_b" 2>&1 &
+  python -m repro.obs --label "batch B" -- \
+    python -m pytest -x -q "${batch_b[@]}" >"$log_b" 2>&1 &
   pid_b=$!
   rc=0
   wait "$pid_a" || rc=$?

@@ -1,9 +1,11 @@
 """Sweep-level metrics: the results store + the paper's aggregation views.
 
-``MetricsLogger`` (re-exported from :mod:`repro.core.metrics`, where the
-trainers import it) replaces the trainers' ad-hoc ``history`` dicts with a
-uniform (step, name, value) series store that serializes to/from JSON (so a
-checkpointed run resumes with its already-logged metrics intact).
+``MetricsLogger`` (ONE implementation, in :mod:`repro.obs.metrics`;
+re-exported here and via the :mod:`repro.core.metrics` shim the trainers
+import) replaces the trainers' ad-hoc ``history`` dicts with a uniform
+(step, name, value) series store that serializes to/from JSON (so a
+checkpointed run resumes with its already-logged metrics intact) and can
+mirror into the observability :class:`~repro.obs.metrics.Registry`.
 
 ``ResultsStore`` is the sweep-level artifact: one JSONL line per finished
 run (append-only — a killed sweep never corrupts earlier records), plus the

@@ -77,17 +77,25 @@ def _mesh_for(spec: RunSpec):
 
 def run_one(spec: RunSpec, *, checkpoint_dir: Optional[str] = None,
             checkpoint_every: int = 0,
-            log_fn: Optional[Callable[[str], None]] = None
-            ) -> Dict[str, Any]:
-    """Execute one run and return its JSONL record (not yet stored)."""
+            log_fn: Optional[Callable[[str], None]] = None,
+            obs=None) -> Dict[str, Any]:
+    """Execute one run and return its JSONL record (not yet stored).
+
+    ``obs`` (a :class:`repro.obs.Observability`) threads into the trainer:
+    the run's ``MetricsLogger`` series mirror into the shared registry
+    under ``train/`` and each step gets a ``train.step`` span — one
+    observability sink across a whole sweep.
+    """
     t0 = time.time()
     regime = spec.regime()
     if spec.lm_arch:
         out = _run_lm(spec, regime, checkpoint_dir=checkpoint_dir,
-                      checkpoint_every=checkpoint_every, log_fn=log_fn)
+                      checkpoint_every=checkpoint_every, log_fn=log_fn,
+                      obs=obs)
     else:
         out = _run_vision(spec, regime, checkpoint_dir=checkpoint_dir,
-                          checkpoint_every=checkpoint_every, log_fn=log_fn)
+                          checkpoint_every=checkpoint_every, log_fn=log_fn,
+                          obs=obs)
     logger: MetricsLogger = out["metrics"]
     record: Dict[str, Any] = {
         "run_id": spec.run_id,
@@ -110,7 +118,7 @@ def run_one(spec: RunSpec, *, checkpoint_dir: Optional[str] = None,
 
 
 def _run_vision(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
-                log_fn):
+                log_fn, obs=None):
     from repro.models.cnn import model_fns
     from repro.train.trainer import train_vision
     data = spec.data.build()
@@ -122,11 +130,12 @@ def _run_vision(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
         use_kernels=spec.use_kernels, mesh=_mesh_for(spec),
         weight_decay=spec.weight_decay,
         batch_schedule=spec.batch_schedule,
-        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every)
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        obs=obs)
 
 
 def _run_lm(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
-            log_fn):
+            log_fn, obs=None):
     from repro.data.synthetic import lm_sequences, token_lm
     from repro.train.trainer import train_lm
     cfg = _lm_config(spec)
@@ -141,14 +150,15 @@ def _run_lm(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
         track_diffusion=spec.track_diffusion,
         diffusion_every=spec.diffusion_every, log_fn=log_fn,
         mesh=_mesh_for(spec),
-        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every)
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        obs=obs)
 
 
 def run_sweep(sweep: SweepSpec, out_dir: str, *, resume: bool = True,
               checkpoint_every: int = 0,
               keep_checkpoints: bool = False,
-              log_fn: Optional[Callable[[str], None]] = None
-              ) -> List[Dict[str, Any]]:
+              log_fn: Optional[Callable[[str], None]] = None,
+              obs=None) -> List[Dict[str, Any]]:
     """Run (or resume) every run of ``sweep``; returns all its records.
 
     ``out_dir/<sweep.name>/records.jsonl`` accumulates one record per
@@ -179,7 +189,8 @@ def run_sweep(sweep: SweepSpec, out_dir: str, *, resume: bool = True,
             log_fn(f"{tag}: running ({spec.run_id})")
         record = run_one(spec, checkpoint_dir=ckpt_dir if checkpoint_every
                          else None,
-                         checkpoint_every=checkpoint_every, log_fn=log_fn)
+                         checkpoint_every=checkpoint_every, log_fn=log_fn,
+                         obs=obs)
         store.append(record)
         if not keep_checkpoints and os.path.exists(ckpt_dir):
             shutil.rmtree(ckpt_dir)

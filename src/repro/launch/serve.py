@@ -13,8 +13,17 @@ the flash-decode Pallas kernel over a head-major cache.
 ``--continuous`` instead drives the continuous-batching engine
 (:class:`repro.serving.ContinuousEngine`) under a synthetic Poisson arrival
 trace (``--rate`` requests per decode step, ``--requests`` total) with a
-paged KV cache (``--page-size``, ``--slots``), and reports sustained tok/s
-plus the static lockstep baseline over the same trace at equal cache memory.
+paged KV cache (``--page-size``, ``--slots``), and reports sustained
+useful AND raw tok/s (raw counts dead retired-lane decodes; the gap is the
+engine's dropped work) plus the static lockstep baseline over the same
+trace at equal cache memory.
+
+Observability: ``--trace out.json`` writes a Chrome/Perfetto-loadable span
+trace of the serving loop, ``--metrics-out out.jsonl`` the metrics registry
+(for ``--continuous`` that includes the SLO set: TTFT/ITL/e2e percentiles,
+queue depth, slot occupancy, page-pool utilization), and
+``--device-trace LOGDIR`` captures a ``jax.profiler`` device trace whose
+XLA activity lines up under the host spans.
 """
 from __future__ import annotations
 
@@ -27,11 +36,27 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config
 from repro.models import transformer as T
+from repro.obs import NULL_TRACER, Observability
+from repro.obs.trace import device_trace
 from repro.serving import (ContinuousEngine, generate, poisson_trace,
                            run_static_trace)
 
 
-def _run_continuous(params, cfg, args) -> None:
+def _write_obs(obs, args) -> None:
+    if obs is None:
+        return
+    obs.write(args.trace, args.metrics_out)
+    if args.trace:
+        print(f"wrote span trace -> {args.trace} "
+              "(load in ui.perfetto.dev or chrome://tracing)")
+    if args.metrics_out:
+        print(f"wrote metrics JSONL -> {args.metrics_out}")
+    table = obs.summary()
+    if table:
+        print(table)
+
+
+def _run_continuous(params, cfg, args, obs) -> None:
     max_len = args.max_len or 4 * args.prompt_len
     max_len = -(-max_len // args.page_size) * args.page_size
     reqs = poisson_trace(
@@ -44,12 +69,15 @@ def _run_continuous(params, cfg, args) -> None:
         page_size=args.page_size, total_pages=1 + args.slots * n_blocks,
         use_kernels=args.use_kernels, eos_id=args.eos_id,
         temperature=args.temperature, top_k=args.top_k,
-        rng=jax.random.PRNGKey(args.seed + 1))
+        rng=jax.random.PRNGKey(args.seed + 1), obs=obs)
     eng.run(reqs)                      # warm the compile caches
+    if obs is not None:
+        obs.clear()                    # drop warmup spans/latencies
     t0 = time.time()
     comps = eng.run(reqs)
     useful = sum(len(c.tokens) for c in comps.values())
     cont = time.time() - t0
+    stats = eng.stats()
     # static lockstep baseline: same trace, equal cache memory (slots x
     # max_len contiguous rows == the paged pool above)
     run_static_trace(params, cfg, reqs, batch=args.slots, max_len=max_len,
@@ -59,8 +87,11 @@ def _run_continuous(params, cfg, args) -> None:
                                      max_len=max_len,
                                      use_kernels=args.use_kernels)
     stat = time.time() - t0
-    print(f"continuous: {useful} tok in {cont:.2f}s "
-          f"({useful / cont:.1f} tok/s, {eng.steps} decode steps)")
+    print(f"continuous: {useful} useful tok in {cont:.2f}s "
+          f"({useful / cont:.1f} useful tok/s, "
+          f"{stats['raw_tok_s']:.1f} raw tok/s, "
+          f"{int(stats['dropped_tokens'])} dropped, "
+          f"{eng.steps} decode steps)")
     print(f"static:     {static_useful} tok in {stat:.2f}s "
           f"({static_useful / stat:.1f} tok/s)")
 
@@ -96,14 +127,29 @@ def main() -> None:
                     help="--continuous: cache depth (0 = 4x prompt-len)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="--continuous: retire rows on this token id")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto span trace JSON here")
+    ap.add_argument("--metrics-out", default="",
+                    help="append the metrics registry as JSONL here")
+    ap.add_argument("--device-trace", default="",
+                    help="jax.profiler trace logdir (device activity "
+                         "aligned under the host spans)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    obs = None
+    if args.trace or args.metrics_out or args.device_trace:
+        obs = Observability(annotate_device=bool(args.device_trace))
     cfg = dataclasses.replace(get_config(args.arch), dtype=args.dtype)
     rng = jax.random.PRNGKey(args.seed)
     params = T.init_params(rng, cfg)
     if args.continuous:
-        _run_continuous(params, cfg, args)
+        if args.device_trace:
+            with device_trace(args.device_trace):
+                _run_continuous(params, cfg, args, obs)
+        else:
+            _run_continuous(params, cfg, args, obs)
+        _write_obs(obs, args)
         return
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
@@ -139,20 +185,30 @@ def main() -> None:
     def run():
         return gen(params, prompts)
 
+    span = (obs.tracer if obs is not None else NULL_TRACER).span
     n_new = args.batch * args.max_new
     t0 = time.time()
-    out = run()
-    out.block_until_ready()
+    with span("serve.generate_cold", batch=args.batch, max_new=args.max_new):
+        out = run()
+        out.block_until_ready()
     cold = time.time() - t0
+    # explicit warmup: a fully-blocked steady-state call, so neither compile
+    # nor async dispatch from the cold run can leak into the warm number
+    jax.block_until_ready(run())
     t0 = time.time()
-    out = run()
-    out.block_until_ready()
+    with span("serve.generate_warm", batch=args.batch, max_new=args.max_new):
+        out = run()
+        out.block_until_ready()
     warm = time.time() - t0
+    if obs is not None:
+        obs.registry.observe("serve/generate_warm_s", warm)
+        obs.registry.set("serve/generate_warm_tok_s", n_new / warm)
     print(f"generated {out.shape} kernels={args.use_kernels} "
           f"temperature={args.temperature}")
     print(f"cold: {cold:.2f}s ({n_new / cold:.1f} tok/s incl. compile)   "
           f"warm: {warm:.2f}s ({n_new / warm:.1f} tok/s)")
     print("sample row:", out[0, :32].tolist())
+    _write_obs(obs, args)
 
 
 if __name__ == "__main__":

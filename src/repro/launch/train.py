@@ -31,6 +31,8 @@ from repro.core import DiffusionTracker, LargeBatchConfig, Regime
 from repro.data.synthetic import lm_sequences, token_lm
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer as T
+from repro.obs import Observability
+from repro.obs.trace import NULL_TRACER
 from repro.optim import sgd
 from repro.sharding import rules
 from repro.train.trainer import make_lm_train_step
@@ -81,7 +83,15 @@ def main() -> None:
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--log-every", type=int, default=20)
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome/Perfetto span trace JSON here")
+    ap.add_argument("--metrics-out", default="",
+                    help="append the metrics registry as JSONL here")
     args = ap.parse_args()
+
+    obs = (Observability() if (args.trace or args.metrics_out) else None)
+    tracer = obs.tracer if obs is not None else NULL_TRACER
+    reg = obs.registry if obs is not None else None
 
     cfg = get_config(args.arch)
     cfg = dataclasses.replace(cfg, dtype=args.dtype)
@@ -124,11 +134,26 @@ def main() -> None:
             batch = {"tokens": jnp.asarray(seqs[idx])}
             batch.update(extra_inputs(cfg, args.batch, args.seq_len,
                                       jax.random.fold_in(rng, 10_000 + step)))
-            params, opt_state, metrics = step_jit(
-                params, opt_state, batch, jnp.int32(step),
-                jax.random.fold_in(rng, step))
+            ts = time.perf_counter()
+            with tracer.span("train.step", step=step, batch=args.batch):
+                params, opt_state, metrics = step_jit(
+                    params, opt_state, batch, jnp.int32(step),
+                    jax.random.fold_in(rng, step))
+                if reg is not None:
+                    jax.block_until_ready(metrics["loss"])
+            if reg is not None:
+                reg.observe("train/step_time_s", time.perf_counter() - ts)
+                reg.observe("train/loss", float(metrics["loss"]))
+                reg.set("train/lr", float(metrics["lr"]))
+                reg.set("train/batch_size", args.batch)
+                if "grad_norm" in metrics:
+                    reg.observe("train/grad_norm",
+                                float(metrics["grad_norm"]))
+                reg.inc("train/steps")
             if step % args.log_every == 0 or step == regime.total_steps - 1:
                 d = tracker.record(step + 1, params)
+                if reg is not None:
+                    reg.observe("train/weight_dist", float(d))
                 print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
                       f"ce {float(metrics['ce']):.4f} "
                       f"lr {float(metrics['lr']):.4f} |w-w0| {d:.3f}",
@@ -141,6 +166,11 @@ def main() -> None:
             ckpt_save(args.ckpt, regime.total_steps, params, opt_state,
                       extra={"arch": args.arch})
             print(f"checkpoint written to {args.ckpt}")
+    if obs is not None:
+        obs.write(args.trace, args.metrics_out)
+        table = obs.summary()
+        if table:
+            print(table)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,56 @@
+"""Unified observability: host spans + metrics, shared by training and
+serving.
+
+One :class:`Observability` object bundles the two sinks every subsystem
+writes into:
+
+- ``obs.tracer`` — nested wall-clock spans exported as Chrome/Perfetto
+  trace JSON (:mod:`repro.obs.trace`), optionally mirrored into
+  ``jax.profiler.TraceAnnotation`` so a device trace lines up under them;
+- ``obs.registry`` — counters/gauges/streaming histograms with JSONL
+  export and a plain-text summary table (:mod:`repro.obs.metrics`).
+
+Call sites take ``obs=None`` and bind ``NULL_TRACER`` when absent, so an
+un-observed run pays nothing (the disabled span path allocates no objects
+and reads no clocks). See docs/observability.md for the span/metric naming
+contract.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsLogger,
+                               Registry)
+from repro.obs.trace import NULL_TRACER, Tracer, device_trace
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsLogger", "Registry",
+           "Tracer", "NULL_TRACER", "device_trace", "Observability"]
+
+
+class Observability:
+    """Tracer + registry bundle with one-call export.
+
+    ``annotate_device=True`` additionally wraps every span in a
+    ``jax.profiler.TraceAnnotation`` (pair with
+    :class:`repro.obs.trace.device_trace` to capture the XLA side).
+    """
+
+    def __init__(self, *, trace: bool = True,
+                 annotate_device: bool = False):
+        self.tracer = Tracer(enabled=trace,
+                             annotate_device=annotate_device)
+        self.registry = Registry()
+
+    def span(self, name: str, **args):
+        return self.tracer.span(name, **args)
+
+    def clear(self) -> None:
+        """Drop recorded spans and metrics (e.g. between a warmup run and
+        the measured one) without rebinding call sites."""
+        self.tracer.clear()
+        self.registry.clear()
+
+    def write(self, trace_path: str = "", metrics_path: str = "") -> None:
+        if trace_path:
+            self.tracer.write_chrome(trace_path)
+        if metrics_path:
+            self.registry.write_jsonl(metrics_path)
+
+    def summary(self) -> str:
+        return self.registry.summary_table()

@@ -1,0 +1,9 @@
+"""``python -m repro.obs`` — the span-wrapper CLI (see
+:func:`repro.obs.trace._main`). Running the package instead of the
+``repro.obs.trace`` submodule avoids runpy's found-in-sys.modules warning
+(the package __init__ imports the submodule).
+"""
+from repro.obs.trace import _main
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

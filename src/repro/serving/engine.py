@@ -21,6 +21,7 @@ drives it for real batched requests (greedy or temperature/top-k sampling):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -29,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.obs.trace import NULL_TRACER
 
 Params = Any
 
@@ -335,9 +337,19 @@ class ContinuousEngine:
     live host-side (numpy); the decode step is ONE jitted call per token
     over all slots with the cache donated. Retired rows keep stepping (a
     dead row's lane costs nothing extra in the fixed-shape batch) but
-    their ``pos`` is frozen and their output discarded. Compiles are
-    bounded: one decode step, one pt-write, plus one admission prefill per
-    DISTINCT prompt length.
+    their ``pos`` is frozen and their output discarded — those lanes are
+    the raw-vs-useful throughput gap ``stats()`` reports as
+    ``dropped_tokens``. Compiles are bounded: one decode step, one
+    pt-write, plus one admission prefill per DISTINCT prompt length.
+
+    ``obs`` (a :class:`repro.obs.Observability`) instruments the loop:
+    spans around decode step / admission / page allocation, and the SLO
+    set in the registry — ``serve/ttft_s`` (enqueue to first token),
+    ``serve/itl_s`` (per-token inter-token gap), ``serve/e2e_s``
+    (enqueue to retirement), plus per-tick ``serve/queue_depth``,
+    ``serve/slot_occupancy``, and ``serve/page_pool_util`` histograms.
+    Without ``obs`` every instrumentation point is the tracer's no-op
+    singleton span / a skipped branch.
     """
 
     def __init__(self, params: Params, cfg: ModelConfig, *,
@@ -345,7 +357,7 @@ class ContinuousEngine:
                  page_size: int = 16, total_pages: Optional[int] = None,
                  use_kernels: bool = False, eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None, obs=None):
         if any(s.cross_attn for s in (tuple(cfg.head_pattern)
                                       + tuple(cfg.body_pattern)
                                       + tuple(cfg.tail_pattern))):
@@ -361,6 +373,9 @@ class ContinuousEngine:
         self.temperature = temperature
         self.top_k = top_k
         self.dtype = jnp.dtype(cfg.dtype)
+        self.obs = obs
+        self._tracer = obs.tracer if obs is not None else NULL_TRACER
+        self._reg = obs.registry if obs is not None else None
         self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.paged = layout == "paged"
         if self.paged:
@@ -407,7 +422,12 @@ class ContinuousEngine:
         self._generated: Dict[int, list] = {}
         self.clock = 0.0              # decode steps executed
         self.steps = 0
-        self.tokens_out = 0
+        self.tokens_out = 0           # useful: tokens delivered to requests
+        self.tokens_raw = 0           # every token the model decoded
+        self.tokens_dropped = 0       # retired-lane tokens thrown away
+        self._enq_wall: Dict[int, float] = {}   # req id -> queue-entry wall
+        self._run_t0 = time.perf_counter()
+        self._run_elapsed = 0.0       # frozen at run() end
         self._rng_i = 0
 
     # -- scheduling ----------------------------------------------------------
@@ -420,7 +440,13 @@ class ContinuousEngine:
                 f"({req.max_new_tokens}) must fit max_len={self.max_len}")
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.id}: max_new_tokens must be >= 1")
+        self._enqueue(req)
+
+    def _enqueue(self, req: Request) -> None:
+        """Make a request visible to the scheduler; the wall clock here is
+        the zero point for its TTFT/e2e latencies."""
         self.queue.append(req)
+        self._enq_wall.setdefault(req.id, time.perf_counter())
 
     def _next_rng(self) -> jax.Array:
         self._rng_i += 1
@@ -468,26 +494,34 @@ class ContinuousEngine:
     def _admit(self, req: Request, slot: int) -> bool:
         prompt = jnp.asarray(req.prompt, jnp.int32)
         L = int(prompt.shape[0])
-        if self.paged:
-            if not self._pages_for(-(-L // self.page_size), slot):
-                return False               # pool exhausted; stay queued
-        fn = self._admit_fns.get(L)
-        if fn is None:
-            fn = self._admit_fns[L] = self._make_admit(L)
-        rng = self._next_rng()
-        if self.paged:
-            pages = jnp.asarray(self.pt_host[slot], jnp.int32)
-            tok, self.cache = fn(self.params, self.cache, prompt,
-                                 jnp.int32(slot), pages, rng)
-        else:
-            tok, self.cache = fn(self.params, self.cache, prompt,
-                                 jnp.int32(slot), rng)
-        self._last = self._last.at[slot].set(tok)
+        with self._tracer.span("serve.admit", req=req.id, prompt_len=L,
+                               slot=slot):
+            if self.paged:
+                if not self._pages_for(-(-L // self.page_size), slot):
+                    return False           # pool exhausted; stay queued
+            fn = self._admit_fns.get(L)
+            if fn is None:
+                fn = self._admit_fns[L] = self._make_admit(L)
+            rng = self._next_rng()
+            if self.paged:
+                pages = jnp.asarray(self.pt_host[slot], jnp.int32)
+                tok, self.cache = fn(self.params, self.cache, prompt,
+                                     jnp.int32(slot), pages, rng)
+            else:
+                tok, self.cache = fn(self.params, self.cache, prompt,
+                                     jnp.int32(slot), rng)
+            self._last = self._last.at[slot].set(tok)
         self.pos[slot] = L
         self.active[slot] = True
         self.slot_req[slot] = req
         self._generated[req.id] = []
         self.tokens_out += 1
+        self.tokens_raw += 1
+        if self._reg is not None:
+            # the admission prefill sampled the request's FIRST token
+            wall = time.perf_counter()
+            self._reg.observe("serve/ttft_s",
+                              wall - self._enq_wall.get(req.id, wall))
         self._record(slot, int(tok[0]))
         return True
 
@@ -508,6 +542,10 @@ class ContinuousEngine:
             finished_at=self.clock)
         self.active[slot] = False     # pos intentionally frozen
         self.slot_req[slot] = None
+        enq = self._enq_wall.pop(req.id, None)
+        if self._reg is not None and enq is not None:
+            self._reg.observe("serve/e2e_s", time.perf_counter() - enq)
+            self._reg.inc("serve/completions")
         if self.paged:
             row = self.pt_host[slot]
             self.free_pages.extend(int(p) for p in row[row != 0])
@@ -517,7 +555,7 @@ class ContinuousEngine:
 
     def _release_arrivals(self) -> None:
         while self.pending and self.pending[0].arrival <= self.clock:
-            self.queue.append(self.pending.pop(0))
+            self._enqueue(self.pending.pop(0))
 
     def _admit_ready(self) -> None:
         free = [s for s in range(self.num_slots) if not self.active[s]]
@@ -530,7 +568,7 @@ class ContinuousEngine:
     def _ensure_pages(self) -> None:
         """Pre-step page allocation: every active row is about to write its
         K/V at slot ``pos`` — make sure the block holding it is backed."""
-        dirty = False
+        dirty = 0
         for s in range(self.num_slots):
             if not self.active[s]:
                 continue
@@ -541,27 +579,47 @@ class ContinuousEngine:
                         "page pool exhausted mid-decode: total_pages too "
                         "small for the admitted working set")
                 self.pt_host[s, blk] = self.free_pages.pop()
-                dirty = True
+                dirty += 1
         if dirty:
-            self.cache = self._write_pt_fn(
-                self.cache, jnp.asarray(self.pt_host))
+            with self._tracer.span("serve.page_alloc", pages=dirty):
+                self.cache = self._write_pt_fn(
+                    self.cache, jnp.asarray(self.pt_host))
 
     # -- the loop ------------------------------------------------------------
 
     def step(self) -> None:
         """One decode step over all slots (active rows advance; retired
         rows write into masked slots / the trash page and are ignored)."""
-        if self.paged:
-            self._ensure_pages()
-        rng = (self._next_rng() if self.temperature > 0 else None)
-        toks, self.cache = self._step_fn(
-            self.params, self.cache, self._last,
-            jnp.asarray(self.pos), rng)
-        self._last = toks
-        host = jax.device_get(toks)[:, 0]
+        t0 = time.perf_counter()
+        with self._tracer.span("serve.decode_step", step=self.steps):
+            if self.paged:
+                self._ensure_pages()
+            rng = (self._next_rng() if self.temperature > 0 else None)
+            toks, self.cache = self._step_fn(
+                self.params, self.cache, self._last,
+                jnp.asarray(self.pos), rng)
+            self._last = toks
+            host = jax.device_get(toks)[:, 0]
         was_active = [s for s in range(self.num_slots) if self.active[s]]
         self.steps += 1
         self.clock += 1.0
+        # every lane decoded a token; only active lanes delivered one
+        self.tokens_raw += self.num_slots
+        self.tokens_dropped += self.num_slots - len(was_active)
+        if self._reg is not None:
+            dt = time.perf_counter() - t0
+            reg = self._reg
+            reg.observe("serve/step_time_s", dt)
+            itl = reg.histogram("serve/itl_s")
+            for _ in was_active:   # each active row got one token this tick
+                itl.observe(dt)
+            reg.observe("serve/queue_depth", len(self.queue))
+            reg.observe("serve/slot_occupancy",
+                        len(was_active) / self.num_slots)
+            if self.paged:
+                in_use = self.total_pages - 1 - len(self.free_pages)
+                reg.observe("serve/page_pool_util",
+                            in_use / (self.total_pages - 1))
         for s in was_active:
             self.pos[s] += 1
             self.tokens_out += 1
@@ -579,20 +637,40 @@ class ContinuousEngine:
                     or L + r.max_new_tokens > self.max_len:
                 raise ValueError(f"request {r.id} does not fit max_len="
                                  f"{self.max_len}")
-        while self.pending or self.queue or self.active.any():
-            self._release_arrivals()
-            self._admit_ready()
-            if not self.active.any():
-                if self.pending:      # idle: jump the clock to next arrival
-                    self.clock = max(self.clock, self.pending[0].arrival)
-                    continue
-                break                 # queue non-empty but nothing admitted
-            self.step()
+        with self._tracer.span("serve.run", requests=len(self.pending)):
+            while self.pending or self.queue or self.active.any():
+                self._release_arrivals()
+                self._admit_ready()
+                if not self.active.any():
+                    if self.pending:  # idle: jump the clock to next arrival
+                        self.clock = max(self.clock, self.pending[0].arrival)
+                        continue
+                    break             # queue non-empty but nothing admitted
+                self.step()
         if self.queue:
             raise RuntimeError(
                 f"{len(self.queue)} requests could never be admitted "
                 f"(prompt longer than any slot's page budget?)")
+        self._run_elapsed = time.perf_counter() - self._run_t0
+        if self._reg is not None:
+            for name, value in self.stats().items():
+                self._reg.set(f"serve/{name}", value)
         return self.completions
+
+    def stats(self) -> Dict[str, float]:
+        """Throughput accounting for the last/current ``run``: raw tok/s is
+        every token the model decoded (dead retired lanes included);
+        useful tok/s counts only tokens delivered to a request — the gap
+        (``dropped_tokens``) is the engine's wasted work."""
+        elapsed = max(self._run_elapsed
+                      or time.perf_counter() - self._run_t0, 1e-9)
+        return {"steps": float(self.steps),
+                "useful_tokens": float(self.tokens_out),
+                "raw_tokens": float(self.tokens_raw),
+                "dropped_tokens": float(self.tokens_dropped),
+                "useful_tok_s": self.tokens_out / elapsed,
+                "raw_tok_s": self.tokens_raw / elapsed,
+                "elapsed_s": elapsed}
 
 
 def poisson_trace(cfg: ModelConfig, n_requests: int, *, rate: float,

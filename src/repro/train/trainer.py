@@ -10,6 +10,7 @@
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -23,9 +24,23 @@ from repro.core.large_batch import LargeBatchConfig
 from repro.core.metrics import MetricsLogger
 from repro.core.regime import Regime
 from repro.models import transformer as T
+from repro.obs.trace import NULL_TRACER
 from repro.optim import sgd
 
 Params = Any
+
+
+def _obs_step_metrics(reg, t0: float, m: Dict[str, jax.Array],
+                      batch_size: int) -> None:
+    """Per-step training telemetry: step wall time (the caller blocked on
+    the step's output first), grad norm, and the current schedule state
+    (LR / batch size) — the signals the paper's measurement rests on."""
+    reg.observe("train/step_time_s", time.perf_counter() - t0)
+    reg.set("train/lr", float(m["lr"]))
+    reg.set("train/batch_size", batch_size)
+    if "grad_norm" in m:
+        reg.observe("train/grad_norm", float(m["grad_norm"]))
+    reg.inc("train/steps")
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +249,7 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
                  batch_schedule=None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0,
-                 resume: bool = True) -> Dict[str, Any]:
+                 resume: bool = True, obs=None) -> Dict[str, Any]:
     """Full training run; returns final/best accuracy + diffusion trace.
 
     With ``mesh`` (any mesh from :mod:`repro.launch.mesh` — the 1-D
@@ -257,6 +272,14 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
     ``metrics`` output: the returned dict carries a
     :class:`repro.core.metrics.MetricsLogger` under ``"metrics"``
     (the legacy ``"history"`` dict is derived from it).
+
+    ``obs`` (a :class:`repro.obs.Observability`) wraps every step in a
+    ``train.step`` span and emits the training telemetry set —
+    ``train/step_time_s`` / ``train/grad_norm`` histograms, ``train/lr``
+    and ``train/batch_size`` gauges, and the logger's series (eval
+    accuracy, weight distance) mirrored under ``train/``. With ``obs``
+    the loop blocks on each step's output to make the step time real;
+    without it nothing is added to the dispatch path.
     """
     init_fn, apply_fn = model_fns
     init_key, noise_key, shuffle_key = jax.random.split(
@@ -267,6 +290,10 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
     params, opt_state, bn_state, step, epoch, cursor, logger = \
         _restore_run_state(checkpoint_dir if resume else None,
                            params, opt_state, bn_state, tracker)
+    tracer = obs.tracer if obs is not None else NULL_TRACER
+    reg = obs.registry if obs is not None else None
+    if obs is not None:
+        logger.attach_registry(obs.registry, prefix="train/")
 
     if mesh is not None:
         from repro.train.data_parallel import make_dp_vision_train_step
@@ -300,14 +327,21 @@ def train_vision(model_fns, cfg: VisionModelConfig, data,
         cursor += b
         x = jnp.asarray(x_tr[idx])
         y = jnp.asarray(y_tr[idx])
-        params, bn_state, opt_state, m = step_fn(
-            params, bn_state, opt_state, x, y, jnp.int32(step),
-            jax.random.fold_in(noise_key, step))
+        t0 = time.perf_counter()
+        with tracer.span("train.step", step=step, batch=b):
+            params, bn_state, opt_state, m = step_fn(
+                params, bn_state, opt_state, x, y, jnp.int32(step),
+                jax.random.fold_in(noise_key, step))
+            if reg is not None:
+                jax.block_until_ready(m["loss"])
+        if reg is not None:
+            _obs_step_metrics(reg, t0, m, b)
         if tracker is not None and _record_diffusion(
                 step, regime.total_steps, diffusion_every):
             tracker.record(step + 1, params)
         if eval_every and step % eval_every == 0:
-            acc = evaluate(params, bn_state, data.x_test, data.y_test)
+            with tracer.span("train.eval", step=step):
+                acc = evaluate(params, bn_state, data.x_test, data.y_test)
             logger.log(step, val_acc=acc, train_loss=float(m["loss"]),
                        lr=float(m["lr"]))
             best = max(best, acc)
@@ -347,8 +381,8 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
              log_fn: Optional[Callable[[str], None]] = None,
              mesh=None,
              checkpoint_dir: Optional[str] = None,
-             checkpoint_every: int = 0, resume: bool = True
-             ) -> Dict[str, Any]:
+             checkpoint_every: int = 0, resume: bool = True,
+             obs=None) -> Dict[str, Any]:
     """LM twin of :func:`train_vision`: drives :func:`make_lm_train_step`
     over (N, seq_len) token rows with the same structured metrics,
     deterministic shuffling, and checkpoint/resume contract.
@@ -360,6 +394,9 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
     With ``mesh`` (mirroring :func:`train_vision`) the step runs through
     the unified 2-D layer (:mod:`repro.train.parallel`): batch over the dp
     axes, MoE expert weights over ``"model"``.
+
+    ``obs`` mirrors :func:`train_vision`: ``train.step`` spans plus the
+    ``train/*`` telemetry set in the registry.
     """
     init_key, noise_key, shuffle_key = jax.random.split(
         jax.random.PRNGKey(seed), 3)
@@ -369,6 +406,10 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
     params, opt_state, _, step, epoch, cursor, logger = \
         _restore_run_state(checkpoint_dir if resume else None,
                            params, opt_state, None, tracker)
+    tracer = obs.tracer if obs is not None else NULL_TRACER
+    reg = obs.registry if obs is not None else None
+    if obs is not None:
+        logger.attach_registry(obs.registry, prefix="train/")
 
     step_fn = jax.jit(make_lm_train_step(
         cfg, lb, regime, weight_decay=weight_decay,
@@ -406,14 +447,21 @@ def train_lm(cfg: ModelConfig, lb: LargeBatchConfig, regime: Regime,
         idx = perm[cursor:cursor + b]
         cursor += b
         batch = {"tokens": jnp.asarray(train_rows[idx])}
-        params, opt_state, m = step_fn(params, opt_state, batch,
-                                       jnp.int32(step),
-                                       jax.random.fold_in(noise_key, step))
+        t0 = time.perf_counter()
+        with tracer.span("train.step", step=step, batch=b):
+            params, opt_state, m = step_fn(
+                params, opt_state, batch, jnp.int32(step),
+                jax.random.fold_in(noise_key, step))
+            if reg is not None:
+                jax.block_until_ready(m["loss"])
+        if reg is not None:
+            _obs_step_metrics(reg, t0, m, b)
         if tracker is not None and _record_diffusion(
                 step, regime.total_steps, diffusion_every):
             tracker.record(step + 1, params)
         if eval_every and step % eval_every == 0:
-            ce = eval_ce()
+            with tracer.span("train.eval", step=step):
+                ce = eval_ce()
             logger.log(step, eval_ce=ce, train_loss=float(m["loss"]),
                        lr=float(m["lr"]))
             if log_fn:
