@@ -607,6 +607,13 @@ def main() -> None:
                     help="small shapes / few steps (CI mode)")
     ap.add_argument("--only", default="",
                     help="comma-separated benchmark names")
+    ap.add_argument("--gate", action="store_true",
+                    help="after the run, diff each new BENCH_*.json row "
+                         "against its trailing median and exit 1 on "
+                         "regression (repro.analysis bench gate)")
+    ap.add_argument("--gate-tol", type=float, default=None,
+                    help="--gate: fractional regression tolerance "
+                         "(default 0.5 = 50%%)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
@@ -616,6 +623,15 @@ def main() -> None:
     with open("experiments/bench_results.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(ROWS) + "\n")
+    if args.gate:
+        from repro.analysis.bench_gate import check_bench_regressions
+        from repro.analysis.findings import render
+        ran = {row.split(",", 1)[0] for row in ROWS}
+        kw = {} if args.gate_tol is None else {"tol": args.gate_tol}
+        findings = check_bench_regressions(names=sorted(ran), **kw)
+        print(render(findings))
+        if findings:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

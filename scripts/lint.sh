@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Static correctness suite: AST lint over src/, Pallas kernel contract
+# checker, and the jaxpr/HLO trace auditor over the hot jitted entry
+# points. Exit 1 on any finding (see docs/analysis.md for the rule
+# catalog and the # repro: ignore[rule-id] suppression syntax).
+#
+# Usage:
+#   scripts/lint.sh                  # full default suite
+#   scripts/lint.sh --lint           # AST rules only (instant, jax-free)
+#   scripts/lint.sh --bench-gate     # opt-in BENCH_*.json regression gate
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

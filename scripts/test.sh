@@ -33,7 +33,10 @@ python -m pytest --collect-only -q >/dev/null
 
 echo "== run =="
 if [[ ${#args[@]} -eq 0 ]]; then
-  batch_a=(tests/test_decode.py tests/test_parallel_2d.py tests/test_serving_continuous.py)
+  # test_analysis rides batch A: its repo-wide gates (lint + kernel
+  # contracts + trace audit) compile the hot entry points, which overlaps
+  # the decode suite's long pole instead of stretching batch B
+  batch_a=(tests/test_decode.py tests/test_parallel_2d.py tests/test_serving_continuous.py tests/test_analysis.py)
   batch_b=()
   for f in tests/test_*.py; do
     case " ${batch_a[*]} " in

@@ -1,0 +1,18 @@
+"""Static correctness suite: AST lint, jaxpr/HLO trace auditor, kernel
+contract checker, bench regression gate.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.analysis            # lint+contracts+trace
+    PYTHONPATH=src python -m repro.analysis --lint     # one layer only
+    PYTHONPATH=src python -m repro.analysis --bench-gate
+
+Exit status 1 when any finding survives suppression
+(``# repro: ignore[rule-id]``). ``docs/analysis.md`` has the rule catalog;
+``tests/test_analysis.py`` enforces the repo-wide gate in tier 1.
+"""
+from repro.analysis.findings import (Finding, filter_suppressed, render,
+                                     suppressions, to_json)
+
+__all__ = ["Finding", "filter_suppressed", "render", "suppressions",
+           "to_json"]

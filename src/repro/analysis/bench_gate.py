@@ -1,0 +1,76 @@
+"""Bench regression gate: newest ``BENCH_*.json`` row vs trailing median.
+
+Each benchmark appends one JSONL row ``{ts, name, us_per_call, derived}``
+to ``BENCH_<name>.json`` at the repo root (:mod:`benchmarks.run`). The gate
+compares the newest ``us_per_call`` against the median of up to ``window``
+preceding rows and emits a ``bench-regression`` finding when it is more
+than ``tol`` slower (fractional: 0.5 = 50%). Benchmarks with fewer than
+``min_history`` prior rows are skipped — one noisy cold row must not brick
+the gate, which is also why this check is opt-in (``--bench-gate`` /
+``benchmarks.run --gate``) rather than part of the default suite: it
+judges timing on whatever machine ran it, not code.
+"""
+from __future__ import annotations
+
+import json
+import statistics
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import REPO_ROOT
+
+DEFAULT_TOL = 0.5          # generous: container timings are noisy
+DEFAULT_WINDOW = 8
+DEFAULT_MIN_HISTORY = 3
+
+
+def _load_rows(path: Path) -> List[dict]:
+    rows = []
+    for i, line in enumerate(path.read_text().splitlines(), start=1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError:
+            rows.append({"_bad_line": i})
+            continue
+        rows.append(row)
+    return rows
+
+
+def check_bench_regressions(root: Path = REPO_ROOT, *,
+                            tol: float = DEFAULT_TOL,
+                            window: int = DEFAULT_WINDOW,
+                            min_history: int = DEFAULT_MIN_HISTORY,
+                            names: Optional[Sequence[str]] = None
+                            ) -> List[Finding]:
+    out: List[Finding] = []
+    for path in sorted(root.glob("BENCH_*.json")):
+        rel = path.name
+        rows = _load_rows(path)
+        for row in rows:
+            if "_bad_line" in row:
+                out.append(Finding(rel, row["_bad_line"],
+                                   "bench-regression",
+                                   "unparseable JSONL row"))
+        rows = [r for r in rows
+                if "_bad_line" not in r and "us_per_call" in r]
+        if not rows:
+            continue
+        name = rows[-1].get("name", path.stem)
+        if names and name not in names:
+            continue
+        if len(rows) - 1 < min_history:
+            continue                      # not enough history to judge
+        newest = float(rows[-1]["us_per_call"])
+        prior = [float(r["us_per_call"]) for r in rows[:-1]][-window:]
+        base = statistics.median(prior)
+        if base > 0 and newest > base * (1.0 + tol):
+            out.append(Finding(
+                rel, len(rows), "bench-regression",
+                f"{name}: {newest:.1f} us/call vs trailing median "
+                f"{base:.1f} (+{100 * (newest / base - 1):.0f}%, "
+                f"tol {100 * tol:.0f}%, n={len(prior)})"))
+    return out

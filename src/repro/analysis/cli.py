@@ -1,0 +1,67 @@
+"""``python -m repro.analysis`` — run the static suite, exit 1 on findings.
+
+With no layer flags the default set runs: AST lint over ``src/``, the
+kernel contract checker, and the trace auditor (which traces/compiles the
+hot entry points, a few seconds). Layer flags select subsets; the bench
+gate is opt-in only (``--bench-gate``) because it judges wall-clock
+history, not code — it also backs ``benchmarks/run.py --gate``.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding, render, to_json
+
+
+def run_suite(*, lint: bool = True, contracts: bool = True,
+              trace_audit: bool = True, bench_gate: bool = False,
+              tol: Optional[float] = None) -> List[Finding]:
+    """Lazy per-layer imports: ``--lint`` stays jax-free and instant."""
+    findings: List[Finding] = []
+    if lint:
+        from repro.analysis.lint import run_repo_lint
+        findings += run_repo_lint()
+    if contracts:
+        from repro.analysis.kernel_contracts import run_kernel_contracts
+        findings += run_kernel_contracts()
+    if trace_audit:
+        from repro.analysis.trace_audit import run_trace_audit
+        findings += run_trace_audit()
+    if bench_gate:
+        from repro.analysis import bench_gate as bg
+        kw = {} if tol is None else {"tol": tol}
+        findings += bg.check_bench_regressions(**kw)
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static correctness suite (see docs/analysis.md)")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST lint rules over src/")
+    ap.add_argument("--contracts", action="store_true",
+                    help="Pallas kernel contract checker")
+    ap.add_argument("--trace-audit", action="store_true",
+                    help="jaxpr/HLO audit of the hot jitted entry points")
+    ap.add_argument("--bench-gate", action="store_true",
+                    help="BENCH_*.json newest-vs-trailing-median gate "
+                         "(opt-in; never part of the default set)")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="bench gate: fractional regression tolerance "
+                         "(default 0.5 = 50%%)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON instead of text")
+    args = ap.parse_args(argv)
+
+    any_layer = args.lint or args.contracts or args.trace_audit \
+        or args.bench_gate
+    findings = run_suite(
+        lint=args.lint or not any_layer,
+        contracts=args.contracts or not any_layer,
+        trace_audit=args.trace_audit or not any_layer,
+        bench_gate=args.bench_gate,
+        tol=args.tol)
+    print(to_json(findings) if args.json else render(findings))
+    return 1 if findings else 0

@@ -1,0 +1,182 @@
+"""Layer 3: kernel contract checker — the oracle-per-kernel discipline and
+TPU tile alignment, verified statically.
+
+Three checks over ``src/repro/kernels/`` + ``docs/kernels.md``:
+
+- **kernel-oracle**: every module-level ``*_pallas`` function must appear
+  in a docs/kernels.md contract-table row that also names a ``ref.*``
+  oracle, and every ``ref.*`` name the docs cite must exist as a function
+  in ``kernels/ref.py``. A kernel without an oracle (or docs citing a
+  deleted oracle) breaks the repo's kernel == oracle test discipline.
+- **kernel-doc**: every ``*_pallas`` function is mentioned in
+  docs/kernels.md at all (as ``<module>.<name>``) — an undocumented kernel
+  has no written contract to test against.
+- **kernel-tile**: the tile-size helpers are swept over ragged shapes and
+  both kernel dtypes: :func:`flash_attention._block_sizes` must return
+  sublane-aligned (bq, bk) for any (T, S) — the PR 3 ``T=100 -> bq=104``
+  bug class — and :func:`ops._mamba_tile` must return a 128-multiple
+  divisor, the whole axis (<= its VMEM bound), or ``None`` (oracle
+  fallback); anything else is an illegal BlockSpec off-interpret. The
+  DEFAULT_BLOCK_* constants must themselves be lane-aligned.
+
+Pure AST + pure-Python sweeps: nothing here traces or compiles, so the
+check runs in milliseconds and catches misalignment before any TPU sees
+the kernel.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import warnings
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import REPO_ROOT
+
+KERNELS_DIR = REPO_ROOT / "src" / "repro" / "kernels"
+KERNELS_DOC = REPO_ROOT / "docs" / "kernels.md"
+
+_REF_TOKEN_RE = re.compile(r"`ref\.(\w+)`")
+_PALLAS_TOKEN_RE = re.compile(r"`(\w+)\.(\w+_pallas)`")
+
+# ragged + aligned sequence lengths; 100 is the historical repro case
+_SWEEP_LENS = (1, 7, 8, 100, 128, 129, 257, 1000, 1024)
+_SWEEP_DI = (64, 100, 128, 256, 384, 500, 512, 640, 768, 1000, 1024,
+             1100, 1536, 2048, 4096)
+
+
+def _rel(path: Path) -> str:
+    p = path.resolve()
+    return p.relative_to(REPO_ROOT).as_posix() \
+        if p.is_relative_to(REPO_ROOT) else p.as_posix()
+
+
+def _module_defs(path: Path) -> Dict[str, int]:
+    """Module-level function defs: name -> lineno."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    return {n.name: n.lineno for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def collect_pallas_kernels(kernels_dir: Path = KERNELS_DIR
+                           ) -> List[Tuple[str, str, Path, int]]:
+    """All module-level ``*_pallas`` defs: (module_stem, name, path, line)."""
+    out = []
+    for path in sorted(kernels_dir.glob("*.py")):
+        for name, line in _module_defs(path).items():
+            if name.endswith("_pallas"):
+                out.append((path.stem, name, path, line))
+    return out
+
+
+def check_oracle_pairing(kernels_dir: Path = KERNELS_DIR,
+                         doc_path: Path = KERNELS_DOC) -> List[Finding]:
+    out: List[Finding] = []
+    doc_rel = _rel(doc_path)
+    if not doc_path.exists():
+        return [Finding(doc_rel, 0, "kernel-doc", "docs/kernels.md missing")]
+    doc = doc_path.read_text()
+    ref_defs = _module_defs(kernels_dir / "ref.py")
+
+    # docs -> code: every cited ref.X oracle must exist
+    for i, line in enumerate(doc.splitlines(), start=1):
+        for m in _REF_TOKEN_RE.finditer(line):
+            if m.group(1) not in ref_defs:
+                out.append(Finding(
+                    doc_rel, i, "kernel-oracle",
+                    f"docs cite `ref.{m.group(1)}` but kernels/ref.py has "
+                    "no such function"))
+
+    # contract-table rows that pair pallas kernels with oracles
+    paired: Set[str] = set()          # pallas names on a row with a ref.*
+    mentioned: Set[Tuple[str, str]] = set(_PALLAS_TOKEN_RE.findall(doc))
+    for line in doc.splitlines():
+        if not line.lstrip().startswith("|"):
+            continue
+        row_pallas = [m.group(2) for m in _PALLAS_TOKEN_RE.finditer(line)]
+        if row_pallas and _REF_TOKEN_RE.search(line):
+            paired.update(row_pallas)
+
+    # code -> docs: every *_pallas def documented and oracle-paired
+    for stem, name, path, lineno in collect_pallas_kernels(kernels_dir):
+        rel = _rel(path)
+        if (stem, name) not in mentioned:
+            out.append(Finding(
+                rel, lineno, "kernel-doc",
+                f"`{stem}.{name}` has no contract entry in docs/kernels.md"))
+        elif name not in paired:
+            out.append(Finding(
+                rel, lineno, "kernel-oracle",
+                f"`{stem}.{name}` appears in docs/kernels.md but not on a "
+                "contract-table row naming a `ref.*` oracle"))
+    return out
+
+
+def check_tile_alignment() -> List[Finding]:
+    import jax.numpy as jnp
+
+    from repro.kernels import flash_attention as fa
+    from repro.kernels import flash_decode as fd
+    from repro.kernels import ops
+
+    out: List[Finding] = []
+    fa_rel = "src/repro/kernels/flash_attention.py"
+    ops_rel = "src/repro/kernels/ops.py"
+
+    for const, mod, rel in (("DEFAULT_BLOCK_Q", fa, fa_rel),
+                            ("DEFAULT_BLOCK_K", fa, fa_rel),
+                            ("DEFAULT_BLOCK_K", fd,
+                             "src/repro/kernels/flash_decode.py")):
+        v = getattr(mod, const)
+        if v % 128 != 0:
+            out.append(Finding(rel, 0, "kernel-tile",
+                               f"{const}={v} is not lane-aligned "
+                               "(128-multiple)"))
+
+    for dtype in (jnp.float32, jnp.bfloat16):
+        sub = fa._sublane(dtype)
+        for T in _SWEEP_LENS:
+            for S in _SWEEP_LENS:
+                bq, bk = fa._block_sizes(T, S, fa.DEFAULT_BLOCK_Q,
+                                         fa.DEFAULT_BLOCK_K, dtype)
+                for axis, b, n in (("bq", bq, T), ("bk", bk, S)):
+                    if b % sub != 0 or b <= 0:
+                        out.append(Finding(
+                            fa_rel, 0, "kernel-tile",
+                            f"_block_sizes(T={T}, S={S}, "
+                            f"{jnp.dtype(dtype).name}): {axis}={b} not a "
+                            f"multiple of sublane {sub}"))
+                    # a block longer than the padded axis reads OOB
+                    if b > max(fa._round_up(n, sub), sub):
+                        out.append(Finding(
+                            fa_rel, 0, "kernel-tile",
+                            f"_block_sizes(T={T}, S={S}): {axis}={b} "
+                            f"exceeds the {sub}-padded axis"))
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")   # the sweep hits the warn paths
+        for di in _SWEEP_DI:
+            tile = ops._mamba_tile(di)
+            if tile is None:
+                if di % 128 == 0 or di <= ops._MAX_UNTILED_DI:
+                    out.append(Finding(
+                        ops_rel, 0, "kernel-tile",
+                        f"_mamba_tile({di}) fell back to the oracle though "
+                        "a legal tile exists"))
+            elif tile == di:
+                if di > ops._MAX_UNTILED_DI:
+                    out.append(Finding(
+                        ops_rel, 0, "kernel-tile",
+                        f"_mamba_tile({di}) returned an untiled axis past "
+                        f"_MAX_UNTILED_DI={ops._MAX_UNTILED_DI}"))
+            elif tile % 128 != 0 or di % tile != 0:
+                out.append(Finding(
+                    ops_rel, 0, "kernel-tile",
+                    f"_mamba_tile({di})={tile} is not a 128-multiple "
+                    "divisor of d_inner"))
+    return out
+
+
+def run_kernel_contracts() -> List[Finding]:
+    return check_oracle_pairing() + check_tile_alignment()

@@ -374,6 +374,59 @@ def _is_dus_like(ins: Instr, comps: Dict[str, "Computation"]) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# donation aliasing
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class IoAlias:
+    """One entry of the module's ``input_output_alias`` header: output
+    tuple index <- (parameter number, kind)."""
+    output_index: Tuple[int, ...]
+    param_number: int
+    kind: str            # "may-alias" | "must-alias"
+
+
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{[^}]*\},\s*(may-alias|must-alias)\)")
+
+
+def parse_input_output_aliases(text: str) -> List[IoAlias]:
+    """Parse the module-level ``input_output_alias={ ... }`` header from
+    compiled HLO text (``compiled.as_text()``).
+
+    This is how donation (``donate_argnums``) shows up after buffer
+    assignment: one entry per donated flat input leaf that XLA actually
+    reused for an output. A donated argument that was *not* aliased (e.g.
+    dtype/layout mismatch) is simply absent — which is exactly the hazard
+    the trace auditor checks for. Returns [] when the module has no alias
+    header at all.
+    """
+    start = text.find("input_output_alias={")
+    if start < 0:
+        return []
+    # the header nests braces ({output index} and the per-entry {} attr
+    # dict), so find the matching close by depth, not by regex
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    else:
+        return []
+    body = text[i + 1:j]
+    out: List[IoAlias] = []
+    for e in _ALIAS_ENTRY_RE.finditer(body):
+        idx = tuple(int(x) for x in e.group(1).split(",") if x.strip())
+        out.append(IoAlias(idx, int(e.group(2)), e.group(3)))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # roofline
 # ---------------------------------------------------------------------------
 

@@ -42,7 +42,7 @@ from repro.serving import (ContinuousEngine, generate, poisson_trace,
                            run_static_trace)
 
 
-def _write_obs(obs, args) -> None:
+def _write_obs(args, obs=None) -> None:
     if obs is None:
         return
     obs.write(args.trace, args.metrics_out)
@@ -56,7 +56,7 @@ def _write_obs(obs, args) -> None:
         print(table)
 
 
-def _run_continuous(params, cfg, args, obs) -> None:
+def _run_continuous(params, cfg, args, *, obs=None) -> None:
     max_len = args.max_len or 4 * args.prompt_len
     max_len = -(-max_len // args.page_size) * args.page_size
     reqs = poisson_trace(
@@ -146,10 +146,10 @@ def main() -> None:
     if args.continuous:
         if args.device_trace:
             with device_trace(args.device_trace):
-                _run_continuous(params, cfg, args, obs)
+                _run_continuous(params, cfg, args, obs=obs)
         else:
-            _run_continuous(params, cfg, args, obs)
-        _write_obs(obs, args)
+            _run_continuous(params, cfg, args, obs=obs)
+        _write_obs(args, obs=obs)
         return
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
@@ -208,7 +208,7 @@ def main() -> None:
     print(f"cold: {cold:.2f}s ({n_new / cold:.1f} tok/s incl. compile)   "
           f"warm: {warm:.2f}s ({n_new / warm:.1f} tok/s)")
     print("sample row:", out[0, :32].tolist())
-    _write_obs(obs, args)
+    _write_obs(args, obs=obs)
 
 
 if __name__ == "__main__":

@@ -47,14 +47,18 @@ def build_batches(cfg, *, batch: int, seq_len: int, n_tokens: int,
 
 def extra_inputs(cfg, batch: int, seq_len: int, rng) -> Dict[str, jax.Array]:
     out = {}
+    # one independent subkey per synthetic modality: a config with both an
+    # encoder and a vision tower must not draw the same latents twice
+    r_frames, r_image = jax.random.split(rng)
     if cfg.encoder is not None:
         F = max(1, seq_len // cfg.encoder.frame_ratio)
         out["frames"] = 0.1 * jax.random.normal(
-            rng, (batch, F, cfg.encoder.d_model), jnp.float32
+            r_frames, (batch, F, cfg.encoder.d_model), jnp.float32
         ).astype(jnp.dtype(cfg.dtype))
     if cfg.vision is not None:
         out["image_embeds"] = 0.1 * jax.random.normal(
-            rng, (batch, cfg.vision.n_image_tokens, cfg.d_model), jnp.float32
+            r_image, (batch, cfg.vision.n_image_tokens, cfg.d_model),
+            jnp.float32
         ).astype(jnp.dtype(cfg.dtype))
     return out
 

@@ -1,0 +1,11 @@
+"""BAD: one device metrics pytree fanned out into per-metric host syncs
+(rule host-sync) — each float() blocks the dispatch queue separately."""
+
+
+def log_metrics(logger, m):
+    logger.log(loss=float(m["loss"]), lr=float(m["lr"]))
+    print(float(m["grad_norm"]))
+
+
+def poll_scalar(x):
+    return x.item()

@@ -1,0 +1,9 @@
+"""GOOD: fetch the metrics pytree ONCE with jax.device_get and read the
+plain floats from the host copy — a single device sync per log point."""
+import jax
+
+
+def log_metrics(logger, m):
+    mh = jax.device_get(m)
+    logger.log(loss=float(mh["loss"]), lr=float(mh["lr"]))
+    print(float(mh["grad_norm"]))

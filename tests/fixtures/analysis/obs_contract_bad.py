@@ -1,0 +1,8 @@
+"""BAD: obs= without a None default (forces every caller to build an
+Observability), and span/metric names off the docs/observability.md
+grammar (rule obs-contract)."""
+
+
+def run_engine(cfg, obs):
+    with obs.tracer.span("DecodeStep"):
+        obs.registry.observe("decode latency", 1.0)

@@ -1,0 +1,8 @@
+"""GOOD: obs defaults to None (zero-cost un-observed) and the names follow
+the grammar: spans <subsystem>.<signal>, metrics <subsystem>/<signal>."""
+
+
+def run_engine(cfg, obs=None):
+    if obs is not None:
+        with obs.tracer.span("serve.decode_step"):
+            obs.registry.observe("serve/decode_latency_s", 1.0)

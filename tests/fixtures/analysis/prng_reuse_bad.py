@@ -1,0 +1,10 @@
+"""BAD: the same PRNG key consumed by two jax.random draws without an
+intervening split — the two draws are silently correlated (rule
+prng-reuse)."""
+import jax
+
+
+def draw(rng, shape):
+    a = jax.random.normal(rng, shape)
+    b = jax.random.uniform(rng, shape)
+    return a + b

@@ -1,0 +1,9 @@
+"""GOOD: split once, one subkey per consumer."""
+import jax
+
+
+def draw(rng, shape):
+    ka, kb = jax.random.split(rng)
+    a = jax.random.normal(ka, shape)
+    b = jax.random.uniform(kb, shape)
+    return a + b

@@ -1,0 +1,10 @@
+"""BAD: raw shard_map import straight from jax (rule shard-map-import).
+
+Bypasses the version shim in core/compat.py, so the namespace/kwarg moves
+across jax versions break this module silently.
+"""
+from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def run(fn, mesh, in_specs, out_specs):
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

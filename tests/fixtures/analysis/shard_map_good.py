@@ -1,0 +1,6 @@
+"""GOOD: shard_map through the core/compat.py version shim."""
+from repro.core.compat import shard_map  # noqa: F401
+
+
+def run(fn, mesh, in_specs, out_specs):
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

@@ -60,6 +60,97 @@ def test_model_flops():
     assert H.model_flops(1_000_000, 10, train=False) == 2e7
 
 
+def test_while_loop_trip_count():
+    """An explicit lax.while_loop with a counter < N condition."""
+    N, TRIPS = 32, 11
+
+    def fn(x, w):
+        def cond(c):
+            return c[0] < TRIPS
+
+        def body(c):
+            i, y = c
+            return i + 1, y @ w
+
+        _, y = jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+        return y
+
+    compiled = _compile(fn, jnp.ones((N, N)), jnp.ones((N, N)))
+    stats = H.analyze(compiled.as_text())
+    assert stats.n_whiles >= 1
+    assert TRIPS in stats.trip_counts
+    assert stats.flops == pytest.approx(TRIPS * 2 * N ** 3, rel=0.05)
+
+
+def test_nested_scan_trip_counts_multiply():
+    """Outer scan(3) of inner scan(5) of a matmul: 15x the matmul FLOPs."""
+    N, OUTER, INNER = 32, 3, 5
+
+    def fn(x, w):
+        def inner(c, _):
+            return c @ w, None
+
+        def outer(c, _):
+            y, _ = jax.lax.scan(inner, c, None, length=INNER)
+            return y, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=OUTER)
+        return y
+
+    compiled = _compile(fn, jnp.ones((N, N)), jnp.ones((N, N)))
+    stats = H.analyze(compiled.as_text())
+    assert stats.flops == pytest.approx(OUTER * INNER * 2 * N ** 3,
+                                        rel=0.05)
+    assert {OUTER, INNER} <= set(stats.trip_counts)
+
+
+def test_batched_dot_general_flops():
+    """einsum bmk,bkn->bmn = 2*B*M*N*K: batch dims are result dims, not
+    contracting dims, so _dot_flops must count them exactly once."""
+    B, M, K, Nn = 4, 16, 24, 40
+
+    def fn(a, b):
+        return jnp.einsum("bmk,bkn->bmn", a, b)
+
+    compiled = _compile(fn, jnp.ones((B, M, K)), jnp.ones((B, K, Nn)))
+    stats = H.analyze(compiled.as_text())
+    assert stats.flops == pytest.approx(2 * B * M * K * Nn, rel=0.01)
+
+
+def test_donation_aliasing_positive_and_negative():
+    """parse_input_output_aliases: donated buffers show up as
+    input_output_alias header entries; without donation the header is
+    absent (the trace auditor builds its trace-donation rule on this)."""
+
+    def fn(a, b, c):
+        return a + 1.0, b * 2.0, c.sum()
+
+    args = (jnp.ones((8,)), jnp.ones((8,)), jnp.ones((8,)))
+    donated = jax.jit(fn, donate_argnums=(0, 1)).lower(*args).compile()
+    aliases = H.parse_input_output_aliases(donated.as_text())
+    assert len(aliases) == 2
+    assert {a.param_number for a in aliases} == {0, 1}
+    assert all(a.kind in ("may-alias", "must-alias") for a in aliases)
+    # each aliased output is a distinct tuple position
+    assert len({a.output_index for a in aliases}) == 2
+
+    plain = jax.jit(fn).lower(*args).compile()
+    assert H.parse_input_output_aliases(plain.as_text()) == []
+
+
+def test_donation_unusable_buffer_not_aliased():
+    """A donated argument with no same-shaped output cannot alias — the
+    header holds fewer entries than donated leaves (what trace-donation
+    flags)."""
+
+    def fn(a, b):
+        return b * 2.0
+
+    compiled = jax.jit(fn, donate_argnums=(0,)).lower(
+        jnp.ones((3,)), jnp.ones((4,))).compile()
+    assert len(H.parse_input_output_aliases(compiled.as_text())) == 0
+
+
 def test_collectives_counted_under_mesh():
     """psum inside shard_map on a 1-device mesh still emits an all-reduce."""
     mesh = jax.make_mesh((1,), ("x",))
