@@ -36,7 +36,7 @@ if [[ ${#args[@]} -eq 0 ]]; then
   # test_analysis rides batch A: its repo-wide gates (lint + kernel
   # contracts + trace audit) compile the hot entry points, which overlaps
   # the decode suite's long pole instead of stretching batch B
-  batch_a=(tests/test_decode.py tests/test_parallel_2d.py tests/test_serving_continuous.py tests/test_analysis.py)
+  batch_a=(tests/test_decode.py tests/test_parallel_2d.py tests/test_serving_continuous.py tests/test_analysis.py tests/test_fused_kernels.py)
   batch_b=()
   for f in tests/test_*.py; do
     case " ${batch_a[*]} " in

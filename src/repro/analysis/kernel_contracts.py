@@ -156,6 +156,24 @@ def check_tile_alignment() -> List[Finding]:
 
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")   # the sweep hits the warn paths
+        # fused rmsnorm/swiglu lane gate: a non-128-multiple (100, 1100)
+        # or an axis past _MAX_FUSED_LANE must fall back to the oracle
+        # (None), never mis-tile; any 128-multiple within the bound must
+        # pass through whole.
+        for di in _SWEEP_DI + (ops._MAX_FUSED_LANE,
+                               ops._MAX_FUSED_LANE + 128):
+            ft = ops._fused_tile(di, "contract-sweep")
+            legal = di % 128 == 0 and di <= ops._MAX_FUSED_LANE
+            if legal and ft != di:
+                out.append(Finding(
+                    ops_rel, 0, "kernel-tile",
+                    f"_fused_tile({di}) fell back to the oracle though the "
+                    "axis is lane-aligned and within _MAX_FUSED_LANE"))
+            elif not legal and ft is not None:
+                out.append(Finding(
+                    ops_rel, 0, "kernel-tile",
+                    f"_fused_tile({di})={ft} would mis-tile a non-aligned "
+                    "or oversized axis (must be None -> oracle fallback)"))
         for di in _SWEEP_DI:
             tile = ops._mamba_tile(di)
             if tile is None:

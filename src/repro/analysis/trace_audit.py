@@ -244,6 +244,38 @@ def _flash_decode_paged() -> Built:
     return Built(fn, args)
 
 
+def _flash_decode_paged_int8() -> Built:
+    from repro.kernels import ops
+
+    B, H, KV, hd = 2, 4, 2, 64
+    page, n_pages, n_blocks = 16, 9, 4
+
+    def fn(q, kp, vp, pt, pos, ks, vs):
+        return ops.flash_decode_paged(q, kp, vp, pt, pos, k_scale=ks,
+                                      v_scale=vs, rope_theta=1e4)
+
+    args = (jnp.zeros((B, 1, H, hd), jnp.float32),
+            jnp.zeros((n_pages, KV, page, hd), jnp.int8),
+            jnp.zeros((n_pages, KV, page, hd), jnp.int8),
+            jnp.zeros((B, n_blocks), jnp.int32),
+            jnp.full((B,), 17, jnp.int32),
+            jnp.ones((n_pages, KV, page), jnp.float32),
+            jnp.ones((n_pages, KV, page), jnp.float32))
+    return Built(fn, args)
+
+
+def _decode_step_kernels() -> Built:
+    from repro.models import transformer as T
+    from repro.serving.engine import make_serve_step
+
+    cfg = _lm_cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    cache = T.init_cache(cfg, 2, 64, dtype=jnp.float32, layout="head")
+    fn = make_serve_step(cfg, use_kernels=True)
+    args = (params, cache, jnp.zeros((2, 1), jnp.int32), jnp.int32(5))
+    return Built(fn, args, donate_argnums=(1,))
+
+
 ENTRIES: List[Entry] = [
     Entry("vision_train_step", "src/repro/train/trainer.py",
           _vision_train_step,
@@ -259,6 +291,16 @@ ENTRIES: List[Entry] = [
     Entry("flash_decode_paged", "src/repro/kernels/ops.py",
           _flash_decode_paged, compile_check=False,
           static_knobs={"window": 2, "ragged": 2}),
+    Entry("flash_decode_paged_int8", "src/repro/kernels/ops.py",
+          _flash_decode_paged_int8, compile_check=False,
+          static_knobs={"window": 2, "ragged": 2, "rope": 2}),
+    # decode_step with the fused-kernel stack (fused RoPE q rotation,
+    # rmsnorm+residual, SwiGLU) over a head-major cache. The sampling /
+    # ragged axes are shared with the base decode_step entry; cache_dtype
+    # covers the int8-paged serving variant.
+    Entry("decode_step_kernels", "src/repro/serving/engine.py",
+          _decode_step_kernels,
+          static_knobs={"sampling": 2, "ragged": 2, "cache_dtype": 2}),
 ]
 
 

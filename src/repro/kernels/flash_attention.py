@@ -87,6 +87,22 @@ def _band_intersects(q_start, k_start, *, causal: bool,
     return needed
 
 
+def _rope_rotate(x, pos, theta: float):
+    """Half-rotation RoPE on one f32 (rows, hd) tile with per-row positions
+    ``pos`` (rows, 1) f32 — the in-kernel form of ``layers.apply_rope``
+    (llama convention, ``freqs_i = theta ** -(i / (hd/2))``). Shared by the
+    fused-RoPE attention forward and both decode kernels so the rotation
+    cannot drift between them."""
+    hd = x.shape[-1]
+    half = hd // 2
+    j = jax.lax.broadcasted_iota(jnp.float32, (1, half), 1)
+    ang = pos * jnp.exp(-(j / half) * math.log(theta))    # (rows, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[:, :half], x[:, half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
 def _visibility_mask(s_shape, q_start, k_start, *, causal: bool,
                      window: Optional[int], seq_k: int, kv_offset=None):
     q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, s_shape, 0)
@@ -110,12 +126,15 @@ def _visibility_mask(s_shape, q_start, k_start, *, causal: bool,
 
 def _flash_kernel(q_ref, k_ref, v_ref, *rest, scale: float, causal: bool,
                   window: Optional[int], block_q: int, block_k: int,
-                  seq_k: int, has_offsets: bool = False):
-    if has_offsets:
-        off_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
-    else:
-        off_ref = None
-        o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
+                  seq_k: int, has_offsets: bool = False,
+                  rope_theta: Optional[float] = None):
+    rest = list(rest)
+    off_ref = rest.pop(0) if has_offsets else None
+    pq_ref = pk_ref = None
+    if rope_theta is not None:
+        pq_ref = rest.pop(0)
+        pk_ref = rest.pop(0)
+    o_ref, lse_ref, acc_ref, m_ref, l_ref = rest
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -133,9 +152,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, *rest, scale: float, causal: bool,
 
     @pl.when(needed)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, hd)
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, hd)
         k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        if rope_theta is not None:
+            # rotation is linear, so rotating before the 1/sqrt(hd) scale
+            # is exact; padded rows rotate garbage that the visibility mask
+            # (k side) or the output slice (q side) discards
+            q = _rope_rotate(q, pq_ref[0], rope_theta)
+            k = _rope_rotate(k, pk_ref[0], rope_theta)
+        q = q * scale
         s = q @ k.T                                       # (bq, bk)
         mask = _visibility_mask(
             s.shape, q_start, k_start, causal=causal, window=window,
@@ -226,6 +252,107 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, hd), jnp.float32),   # acc
             pltpu.VMEM((bq, 1), jnp.float32),    # running max
             pltpu.VMEM((bq, 1), jnp.float32),    # running normalizer
+        ],
+        interpret=interpret,
+    )(*inputs)
+    if return_residuals:
+        return out[:, :, :T], lse[:, :, :T, 0]
+    return out[:, :, :T]
+
+
+def _rope_rotate_hm(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Head-major RoPE: x (B, Hx, T, hd), pos (B, T) -> x.dtype. Same llama
+    half-split convention as :func:`_rope_rotate`; negate ``pos`` to rotate
+    back (the rotation is orthogonal)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    freqs = jnp.exp(-(jnp.arange(half, dtype=jnp.float32) / half)
+                    * math.log(theta))
+    ang = pos.astype(jnp.float32)[:, None, :, None] * freqs   # (B, 1, T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(dt)
+
+
+def flash_attention_rope_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                                pos: jax.Array, *, theta: float,
+                                causal: bool = True,
+                                window: Optional[int] = None,
+                                block_q: int = DEFAULT_BLOCK_Q,
+                                block_k: int = DEFAULT_BLOCK_K,
+                                return_residuals: bool = False,
+                                kv_offsets: Optional[jax.Array] = None,
+                                interpret: bool = False
+                                ) -> Union[jax.Array,
+                                           Tuple[jax.Array, jax.Array]]:
+    """Flash attention with the RoPE rotation fused into the q/k loads.
+
+    Same contract as :func:`flash_attention_pallas` plus ``pos`` (B, T)
+    positions shared by q and k (self-attention: S == T required) and the
+    static rotation base ``theta``. Each q/k tile is rotated in f32 right
+    after load, so the separate ``apply_rope`` pass over the full (B, H, T,
+    hd) tensors — two extra HBM round-trips — disappears. Positions ride in
+    as (B, Tp, 1) f32 blocks (trailing unit axis keeps the sublane-aligned
+    tile legal, as for lse).
+    """
+    B, H, T, hd = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    if S != T:
+        raise ValueError("fused-RoPE attention is self-attention only")
+    if hd % 2:
+        raise ValueError("RoPE needs an even head dim")
+    g = H // KV
+    bq, bk = _block_sizes(T, S, block_q, block_k, q.dtype)
+    Tp, Sp = _round_up(T, bq), _round_up(S, bk)
+    pos_f = jnp.asarray(pos, jnp.float32)
+    posq = jnp.pad(pos_f, ((0, 0), (0, Tp - T)))[..., None]
+    posk = jnp.pad(pos_f, ((0, 0), (0, Sp - S)))[..., None]
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    grid = (B, H, Tp // bq, Sp // bk)
+
+    has_offsets = kv_offsets is not None
+    inputs = (q, k, v)
+    extra_specs = []
+    if has_offsets:
+        inputs = inputs + (jnp.asarray(kv_offsets, jnp.int32).reshape(B, 1),)
+        extra_specs = [pl.BlockSpec((1, 1), lambda b, h, qi, ki: (b, 0),
+                                    memory_space=pltpu.SMEM)]
+    inputs = inputs + (posq, posk)
+    extra_specs = extra_specs + [
+        pl.BlockSpec((1, bq, 1), lambda b, h, qi, ki: (b, qi, 0)),
+        pl.BlockSpec((1, bk, 1), lambda b, h, qi, ki: (b, ki, 0)),
+    ]
+
+    out, lse = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+            window=window, block_q=bq, block_k=bk, seq_k=S,
+            has_offsets=has_offsets, rope_theta=theta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki: (b, h // g, ki, 0)),
+        ] + extra_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bq, 1), lambda b, h, qi, ki: (b, h, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Tp, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
         ],
         interpret=interpret,
     )(*inputs)
@@ -327,11 +454,64 @@ def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
 
 
+# dq rides as a full (1, 1, Tp, hd) output block in the fused backward; cap
+# its VMEM footprint (acc itemsize * Tp * hd) or fall back to the two-kernel
+# path
+_FUSED_BWD_DQ_VMEM_BYTES = 1 << 21
+
+
+def _flash_bwd_fused_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                            dq_ref, dk_ref, dv_ref, dk_acc, dv_acc, *,
+                            scale: float, causal: bool,
+                            window: Optional[int], block_q: int,
+                            block_k: int, seq_k: int):
+    """One recomputation feeding BOTH accumulators. Grid (B, H, n_kv, n_q),
+    q innermost: dk/dv accumulate in VMEM scratch exactly as in
+    ``_flash_bwd_dkv_kernel``, while dq accumulates into a full-(Tp, hd)
+    output block whose index map is constant over (ki, qi) — the block is
+    resident in VMEM for the whole (b, h) sweep (consecutive revisits), so
+    each (q, kv) pair's ``p``/``ds`` recompute — the expensive half of the
+    backward — happens once instead of twice."""
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+    nq = pl.num_programs(3)
+
+    @pl.when(jnp.logical_and(ki == 0, qi == 0))
+    def _init_dq():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    @pl.when(qi == 0)
+    def _init_kv():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    needed = _band_intersects(q_start, k_start, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k)
+
+    @pl.when(needed)
+    def _compute():
+        q, k, do, p, ds = _recompute_p_ds(
+            q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, q_start,
+            k_start, scale=scale, causal=causal, window=window, seq_k=seq_k)
+        dv_acc[...] += (p.T @ do).astype(dv_acc.dtype)
+        dk_acc[...] += ((ds.T @ q) * scale).astype(dk_acc.dtype)
+        dq_ref[0, 0, pl.ds(q_start, block_q), :] += (
+            (ds @ k) * scale).astype(dq_ref.dtype)
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
 def flash_attention_backward_pallas(
         q: jax.Array, k: jax.Array, v: jax.Array, o: jax.Array,
         lse: jax.Array, do: jax.Array, *, causal: bool = True,
         window: Optional[int] = None, block_q: int = DEFAULT_BLOCK_Q,
-        block_k: int = DEFAULT_BLOCK_K, interpret: bool = False
+        block_k: int = DEFAULT_BLOCK_K, fuse_dq: Optional[bool] = None,
+        acc_dtype=jnp.float32, interpret: bool = False
         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """VJP of :func:`flash_attention_pallas` w.r.t. (q, k, v).
 
@@ -342,6 +522,13 @@ def flash_attention_backward_pallas(
     elementwise pass outside the kernels; the probability blocks are rebuilt
     from ``lse`` inside each kernel, so no (T, S)-sized tensor is ever
     materialised.
+
+    ``fuse_dq=None`` (auto) picks the single-kernel fused path — one
+    ``p``/``ds`` recompute feeding dq AND dk/dv — whenever the full dq block
+    (``Tp * hd`` in ``acc_dtype``) fits the VMEM budget, else the original
+    two-kernel split (which recomputes each block pair twice).
+    ``acc_dtype`` sets the fused path's accumulator precision (the bf16
+    accumulation study in docs/kernels.md uses ``jnp.bfloat16`` here).
     """
     B, H, T, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
@@ -365,23 +552,6 @@ def flash_attention_backward_pallas(
         k = jnp.pad(k, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
 
-    q_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0))
-    kv_spec = pl.BlockSpec((1, 1, bk, hd),
-                           lambda b, h, qi, ki: (b, h // g, ki, 0))
-    row_spec = pl.BlockSpec((1, 1, bq, 1), lambda b, h, qi, ki: (b, h, qi, 0))
-
-    dq = pl.pallas_call(
-        functools.partial(
-            _flash_bwd_dq_kernel, scale=scale, causal=causal, window=window,
-            block_q=bq, block_k=bk, seq_k=S),
-        grid=(B, H, Tp // bq, Sp // bk),
-        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
-        out_specs=q_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
-        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
-        interpret=interpret,
-    )(q, k, v, do, lse, delta)
-
     # transposed grid: kv blocks outer, q blocks innermost so the dk/dv
     # accumulators persist in VMEM across q steps
     qT_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, ki, qi: (b, h, qi, 0))
@@ -392,21 +562,90 @@ def flash_attention_backward_pallas(
     dkvT_spec = pl.BlockSpec((1, 1, bk, hd),
                              lambda b, h, ki, qi: (b, h, ki, 0))
 
-    dkh, dvh = pl.pallas_call(
-        functools.partial(
-            _flash_bwd_dkv_kernel, scale=scale, causal=causal, window=window,
-            block_q=bq, block_k=bk, seq_k=S),
-        grid=(B, H, Sp // bk, Tp // bq),
-        in_specs=[qT_spec, kvT_spec, kvT_spec, qT_spec, rowT_spec, rowT_spec],
-        out_specs=[dkvT_spec, dkvT_spec],
-        out_shape=[jax.ShapeDtypeStruct((B, H, Sp, hd), jnp.float32),
-                   jax.ShapeDtypeStruct((B, H, Sp, hd), jnp.float32)],
-        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
-                        pltpu.VMEM((bk, hd), jnp.float32)],
-        interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    if fuse_dq is None:
+        fuse_dq = (Tp * hd * jnp.dtype(acc_dtype).itemsize
+                   <= _FUSED_BWD_DQ_VMEM_BYTES)
+
+    if fuse_dq:
+        dq_full_spec = pl.BlockSpec((1, 1, Tp, hd),
+                                    lambda b, h, ki, qi: (b, h, 0, 0))
+        dqh, dkh, dvh = pl.pallas_call(
+            functools.partial(
+                _flash_bwd_fused_kernel, scale=scale, causal=causal,
+                window=window, block_q=bq, block_k=bk, seq_k=S),
+            grid=(B, H, Sp // bk, Tp // bq),
+            in_specs=[qT_spec, kvT_spec, kvT_spec, qT_spec, rowT_spec,
+                      rowT_spec],
+            out_specs=[dq_full_spec, dkvT_spec, dkvT_spec],
+            out_shape=[jax.ShapeDtypeStruct((B, H, Tp, hd), acc_dtype),
+                       jax.ShapeDtypeStruct((B, H, Sp, hd), acc_dtype),
+                       jax.ShapeDtypeStruct((B, H, Sp, hd), acc_dtype)],
+            scratch_shapes=[pltpu.VMEM((bk, hd), acc_dtype),
+                            pltpu.VMEM((bk, hd), acc_dtype)],
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)
+        dq = dqh.astype(q.dtype)
+    else:
+        q_spec = pl.BlockSpec((1, 1, bq, hd),
+                              lambda b, h, qi, ki: (b, h, qi, 0))
+        kv_spec = pl.BlockSpec((1, 1, bk, hd),
+                               lambda b, h, qi, ki: (b, h // g, ki, 0))
+        row_spec = pl.BlockSpec((1, 1, bq, 1),
+                                lambda b, h, qi, ki: (b, h, qi, 0))
+
+        dq = pl.pallas_call(
+            functools.partial(
+                _flash_bwd_dq_kernel, scale=scale, causal=causal,
+                window=window, block_q=bq, block_k=bk, seq_k=S),
+            grid=(B, H, Tp // bq, Sp // bk),
+            in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+            out_specs=q_spec,
+            out_shape=jax.ShapeDtypeStruct((B, H, Tp, hd), q.dtype),
+            scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)
+
+        dkh, dvh = pl.pallas_call(
+            functools.partial(
+                _flash_bwd_dkv_kernel, scale=scale, causal=causal,
+                window=window, block_q=bq, block_k=bk, seq_k=S),
+            grid=(B, H, Sp // bk, Tp // bq),
+            in_specs=[qT_spec, kvT_spec, kvT_spec, qT_spec, rowT_spec,
+                      rowT_spec],
+            out_specs=[dkvT_spec, dkvT_spec],
+            out_shape=[jax.ShapeDtypeStruct((B, H, Sp, hd), jnp.float32),
+                       jax.ShapeDtypeStruct((B, H, Sp, hd), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                            pltpu.VMEM((bk, hd), jnp.float32)],
+            interpret=interpret,
+        )(q, k, v, do, lse, delta)
 
     # GQA: sum the per-q-head cotangents over each q-head group
     dk = dkh.reshape(B, KV, g, Sp, hd).sum(axis=2)[:, :, :S].astype(k.dtype)
     dv = dvh.reshape(B, KV, g, Sp, hd).sum(axis=2)[:, :, :S].astype(v.dtype)
     return dq[:, :, :T], dk, dv
+
+
+def flash_attention_rope_backward_pallas(
+        q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+        o: jax.Array, lse: jax.Array, do: jax.Array, *, theta: float,
+        causal: bool = True, window: Optional[int] = None,
+        block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+        interpret: bool = False) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """VJP of :func:`flash_attention_rope_pallas` w.r.t. (q, k, v).
+
+    The rotation is orthogonal and position-wise, so the chain rule factors
+    cleanly around the shared backward kernels: rotate q/k by +theta once
+    outside (a cheap elementwise recompute — the unrotated q/k are the saved
+    residuals), run :func:`flash_attention_backward_pallas` on the rotated
+    inputs, then rotate the resulting dq/dk back by -theta
+    (``R(-theta) = R(theta)^T``). dv is untouched by RoPE.
+    """
+    qr = _rope_rotate_hm(q, pos, theta)
+    kr = _rope_rotate_hm(k, pos, theta)
+    dqr, dkr, dv = flash_attention_backward_pallas(
+        qr, kr, v, o, lse, do, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    dq = _rope_rotate_hm(dqr, -jnp.asarray(pos, jnp.float32), theta)
+    dk = _rope_rotate_hm(dkr, -jnp.asarray(pos, jnp.float32), theta)
+    return dq, dk, dv

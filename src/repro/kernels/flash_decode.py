@@ -67,7 +67,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.flash_attention import (NEG_INF, _round_up, _sublane)
+from repro.kernels.flash_attention import (NEG_INF, _rope_rotate,
+                                           _rope_rotate_hm, _round_up,
+                                           _sublane)
 
 DEFAULT_BLOCK_K = 512
 
@@ -93,7 +95,8 @@ def _slot_visibility(slot, pos, *, seq_k: int, window: Optional[int],
 def _flash_decode_kernel(pos_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
                          acc_ref, m_ref, l_ref, *, scale: float,
                          window: Optional[int], ring: bool, seq_k: int,
-                         block_k: int, has_offsets: bool):
+                         block_k: int, has_offsets: bool,
+                         rope_theta: Optional[float] = None):
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -119,7 +122,16 @@ def _flash_decode_kernel(pos_ref, off_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(needed)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # (g, hd)
+        q = q_ref[0, 0].astype(jnp.float32)               # (g, hd)
+        if rope_theta is not None:
+            # cached keys are rotated at write time; only the fresh query
+            # row still needs its rotation — fused here, by the row's
+            # logical position (pos minus any left pad)
+            qpos = pos - (off_ref[0, 0] if has_offsets else 0)
+            q = _rope_rotate(
+                q, jnp.zeros((q.shape[0], 1), jnp.float32) + qpos,
+                rope_theta)
+        q = q * scale
         k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
         s = q @ k.T                                       # (g, bk)
@@ -146,6 +158,7 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                         pos: jax.Array, *, window: Optional[int] = None,
                         ring: bool = False,
                         offsets: Optional[jax.Array] = None,
+                        rope_theta: Optional[float] = None,
                         block_k: int = DEFAULT_BLOCK_K,
                         interpret: bool = False) -> jax.Array:
     """q: (B, H, hd); k, v: (B, KV, S, hd) head-major cache -> (B, H, hd).
@@ -157,6 +170,10 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     masked, where the slot->position map is the identity (``ring=False``) or
     the ring-buffer map (``ring=True``, S = ring depth). ``offsets`` (B,)
     masks the left padding of ragged prompts.
+
+    ``rope_theta`` fuses the query's RoPE rotation (by ``pos - offset``)
+    into the kernel — q arrives UNROTATED; cached keys are rotated at
+    write time as before.
     """
     B, H, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
@@ -183,7 +200,8 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     out = pl.pallas_call(
         functools.partial(
             _flash_decode_kernel, scale=1.0 / math.sqrt(hd), window=window,
-            ring=ring, seq_k=S, block_k=bk, has_offsets=has_offsets),
+            ring=ring, seq_k=S, block_k=bk, has_offsets=has_offsets,
+            rope_theta=rope_theta),
         grid=(B, KV, Sp // bk),
         in_specs=[
             pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0),
@@ -209,6 +227,7 @@ def flash_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
                            pos: jax.Array, *, window: Optional[int] = None,
                            ring: bool = False,
                            offsets: Optional[jax.Array] = None,
+                           rope_theta: Optional[float] = None,
                            block_k: int = 2048) -> jax.Array:
     """Pure-jnp lowering of the same blockwise online-softmax program the
     Pallas kernel runs: a ``lax.scan`` over KV blocks carrying (m, l, acc),
@@ -217,6 +236,13 @@ def flash_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
     B, H, hd = q.shape
     KV, S = k.shape[1], k.shape[2]
     g = H // KV
+    if rope_theta is not None:
+        qpos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        if offsets is not None:
+            qpos = qpos - jnp.asarray(offsets, jnp.int32).reshape(-1)
+        q = _rope_rotate_hm(q[:, :, None, :],
+                            jnp.broadcast_to(qpos[:, None], (B, 1)),
+                            rope_theta)[:, :, 0, :]
     bk = min(block_k, S)
     Sp = _round_up(S, bk)
     if Sp != S:
@@ -263,9 +289,17 @@ def flash_decode_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _flash_decode_paged_kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref,
-                               o_ref, acc_ref, m_ref, l_ref, *, scale: float,
+                               *rest, scale: float,
                                window: Optional[int], page_size: int,
-                               n_blocks: int, has_offsets: bool):
+                               n_blocks: int, has_offsets: bool,
+                               quantized: bool = False,
+                               rope_theta: Optional[float] = None):
+    rest = list(rest)
+    ks_ref = vs_ref = None
+    if quantized:
+        ks_ref = rest.pop(0)
+        vs_ref = rest.pop(0)
+    o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     i = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -289,9 +323,20 @@ def _flash_decode_paged_kernel(pt_ref, pos_ref, off_ref, q_ref, k_ref, v_ref,
 
     @pl.when(needed)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # (g, hd)
+        q = q_ref[0, 0].astype(jnp.float32)               # (g, hd)
+        if rope_theta is not None:
+            qpos = pos - (off_ref[b] if has_offsets else 0)
+            q = _rope_rotate(
+                q, jnp.zeros((q.shape[0], 1), jnp.float32) + qpos,
+                rope_theta)
+        q = q * scale
         k = k_ref[0, 0].astype(jnp.float32)               # (ps, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # per-slot scales (ps, 1) broadcast over hd: int8 pages
+            # dequantize in VMEM, right at the load
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         s = q @ k.T                                       # (g, ps)
         slot = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = _slot_visibility(
@@ -316,6 +361,9 @@ def flash_decode_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
                               pt: jax.Array, pos: jax.Array, *,
                               window: Optional[int] = None,
                               offsets: Optional[jax.Array] = None,
+                              k_scale: Optional[jax.Array] = None,
+                              v_scale: Optional[jax.Array] = None,
+                              rope_theta: Optional[float] = None,
                               interpret: bool = False) -> jax.Array:
     """q: (B, H, hd); kp, vp: (n_pages, KV, page_size, hd) physical page
     pool; pt: (B, n_blocks) int32 block table -> (B, H, hd).
@@ -328,6 +376,12 @@ def flash_decode_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
     Grid: (B, KV, n_blocks) with the page axis innermost (online softmax
     over logical pages in order). Ring buffers are not paged (SWA caches
     are window-bounded); ``ring`` is intentionally absent.
+
+    ``k_scale``/``v_scale`` (n_pages, KV, page_size) f32 mark an int8 pool:
+    kp/vp hold int8 codes and each slot's row dequantizes in VMEM right at
+    the load (``k = kp * k_scale``), so the HBM traffic per page is half
+    (plus the scale sidecar). ``rope_theta`` fuses the query rotation as in
+    :func:`flash_decode_pallas`.
     """
     B, H, hd = q.shape
     n_pages, KV, ps = kp.shape[0], kp.shape[1], kp.shape[2]
@@ -339,18 +393,31 @@ def flash_decode_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
     has_offsets = offsets is not None
     off_arr = (jnp.asarray(offsets, jnp.int32).reshape(B) if has_offsets
                else jnp.zeros((B,), jnp.int32))
+    quantized = k_scale is not None
+
+    page_spec = pl.BlockSpec((1, 1, ps, hd),
+                             lambda b, h, i, pt, pos, off: (pt[b, i], h, 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd),
+                     lambda b, h, i, pt, pos, off: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    inputs = [qg, kp, vp]
+    if quantized:
+        # scales follow the same page gather; trailing unit axis keeps the
+        # sublane-aligned page_size off the lane axis (see lse in the
+        # training forward)
+        scale_spec = pl.BlockSpec(
+            (1, 1, ps, 1), lambda b, h, i, pt, pos, off: (pt[b, i], h, 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scale.reshape(n_pages, KV, ps, 1),
+                   v_scale.reshape(n_pages, KV, ps, 1)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, KV, NB),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd),
-                         lambda b, h, i, pt, pos, off: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, hd),
-                         lambda b, h, i, pt, pos, off: (pt[b, i], h, 0, 0)),
-            pl.BlockSpec((1, 1, ps, hd),
-                         lambda b, h, i, pt, pos, off: (pt[b, i], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd),
                                lambda b, h, i, pt, pos, off: (b, h, 0, 0)),
         scratch_shapes=[
@@ -363,28 +430,41 @@ def flash_decode_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
         functools.partial(
             _flash_decode_paged_kernel, scale=1.0 / math.sqrt(hd),
             window=window, page_size=ps, n_blocks=NB,
-            has_offsets=has_offsets),
+            has_offsets=has_offsets, quantized=quantized,
+            rope_theta=rope_theta),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, g, hd), q.dtype),
         interpret=interpret,
-    )(pt_arr, pos_arr, off_arr, qg, kp, vp)
+    )(pt_arr, pos_arr, off_arr, *inputs)
     return out.reshape(B, H, hd)
 
 
 def flash_decode_paged_blockwise(q: jax.Array, kp: jax.Array, vp: jax.Array,
                                  pt: jax.Array, pos: jax.Array, *,
                                  window: Optional[int] = None,
-                                 offsets: Optional[jax.Array] = None
+                                 offsets: Optional[jax.Array] = None,
+                                 k_scale: Optional[jax.Array] = None,
+                                 v_scale: Optional[jax.Array] = None,
+                                 rope_theta: Optional[float] = None
                                  ) -> jax.Array:
     """Pure-jnp lowering of the paged kernel: a ``lax.scan`` over logical
     blocks, gathering ONE page per row per step (``kp[pt[:, i]]``) under the
     same online-softmax carry and :func:`_slot_visibility` predicate. The
     off-TPU serving path for paged caches — peak memory per step is one
-    page per row, never the full gathered cache."""
+    page per row, never the full gathered cache. ``k_scale``/``v_scale``
+    mark an int8 pool (dequantized per gathered page); ``rope_theta`` fuses
+    the query rotation."""
     B, H, hd = q.shape
     KV, ps = kp.shape[1], kp.shape[2]
     NB = pt.shape[1]
     g = H // KV
+    if rope_theta is not None:
+        qpos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+        if offsets is not None:
+            qpos = qpos - jnp.asarray(offsets, jnp.int32).reshape(-1)
+        q = _rope_rotate_hm(q[:, :, None, :],
+                            jnp.broadcast_to(qpos[:, None], (B, 1)),
+                            rope_theta)[:, :, 0, :]
     qg = (q.astype(jnp.float32).reshape(B, KV, g, hd)
           * (1.0 / math.sqrt(hd)))
     off = None if offsets is None else offsets[:, None, None, None]
@@ -396,6 +476,9 @@ def flash_decode_paged_blockwise(q: jax.Array, kp: jax.Array, vp: jax.Array,
         page_ids, i = inp                              # (B,), ()
         kblk = kp[page_ids].astype(jnp.float32)        # (B, KV, ps, hd)
         vblk = vp[page_ids].astype(jnp.float32)
+        if k_scale is not None:
+            kblk = kblk * k_scale[page_ids][..., None]
+            vblk = vblk * v_scale[page_ids][..., None]
         s = jnp.einsum("bkgd,bksd->bkgs", qg, kblk)
         slot = i * ps + jnp.arange(ps)
         mask = _slot_visibility(slot[None, None, None, :], pos,

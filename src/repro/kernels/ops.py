@@ -18,18 +18,24 @@ import warnings
 from typing import Optional, Set, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
                                            flash_attention_backward_pallas,
-                                           flash_attention_pallas)
+                                           flash_attention_pallas,
+                                           flash_attention_rope_backward_pallas,
+                                           flash_attention_rope_pallas)
 from repro.kernels.flash_decode import (flash_decode_blockwise,
                                         flash_decode_paged_blockwise,
                                         flash_decode_paged_pallas,
                                         flash_decode_pallas)
+from repro.kernels.fused_norm import (rmsnorm_residual_backward_pallas,
+                                      rmsnorm_residual_pallas)
 from repro.kernels.gbn import gbn_backward_pallas, gbn_forward_pallas
 from repro.kernels.mamba_scan import (mamba_chunk_backward_pallas,
                                       mamba_chunk_pallas)
+from repro.kernels.swiglu import swiglu_backward_pallas, swiglu_pallas
 
 
 def _interpret() -> bool:
@@ -106,7 +112,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
                  window: Optional[int] = None, ring: bool = False,
-                 offsets: Optional[jax.Array] = None) -> jax.Array:
+                 offsets: Optional[jax.Array] = None,
+                 rope_theta: Optional[float] = None) -> jax.Array:
     """Single-row decode attention against a head-major cache.
 
     Layout adapter for the model code: q (B, 1, H, hd); k, v (B, KV, S, hd)
@@ -123,23 +130,30 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
     pallas emulation, whose per-grid-step cost scales with the full cache
     (the kernel body itself is oracle-validated under ``interpret=True`` in
     tests/test_serving.py).
+
+    ``rope_theta`` fuses the query-row RoPE rotation (by ``pos - offset``)
+    into the kernel — pass q UNROTATED; cached keys stay write-time rotated.
     """
     B, T, H, hd = q.shape
     assert T == 1, q.shape
     if _interpret():
         out = flash_decode_blockwise(q.reshape(B, H, hd), k, v, pos,
                                      window=window, ring=ring,
-                                     offsets=offsets)
+                                     offsets=offsets, rope_theta=rope_theta)
     else:
         out = flash_decode_pallas(q.reshape(B, H, hd), k, v, pos,
-                                  window=window, ring=ring, offsets=offsets)
+                                  window=window, ring=ring, offsets=offsets,
+                                  rope_theta=rope_theta)
     return out.reshape(B, 1, H, hd)
 
 
 def flash_decode_paged(q: jax.Array, kp: jax.Array, vp: jax.Array,
                        pt: jax.Array, pos: jax.Array, *,
                        window: Optional[int] = None,
-                       offsets: Optional[jax.Array] = None) -> jax.Array:
+                       offsets: Optional[jax.Array] = None,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None,
+                       rope_theta: Optional[float] = None) -> jax.Array:
     """Paged-cache decode attention: q (B, 1, H, hd); kp, vp
     (n_pages, KV, page_size, hd) physical page pool; pt (B, n_blocks)
     int32 block tables -> (B, 1, H, hd).
@@ -149,16 +163,25 @@ def flash_decode_paged(q: jax.Array, kp: jax.Array, vp: jax.Array,
     (:func:`repro.kernels.flash_decode.flash_decode_paged_blockwise`).
     Neither materialises a row's cache contiguously. Forward-only; oracle:
     :func:`repro.kernels.ref.flash_decode_paged_ref`.
+
+    ``k_scale``/``v_scale`` (n_pages, KV, page_size) f32 mark an int8 pool
+    (``cache_dtype="int8"``): pages dequantize at the load, inside the
+    kernel. ``rope_theta`` fuses the query rotation as in
+    :func:`flash_decode`.
     """
     B, T, H, hd = q.shape
     assert T == 1, q.shape
     if _interpret():
         out = flash_decode_paged_blockwise(q.reshape(B, H, hd), kp, vp, pt,
                                            pos, window=window,
-                                           offsets=offsets)
+                                           offsets=offsets, k_scale=k_scale,
+                                           v_scale=v_scale,
+                                           rope_theta=rope_theta)
     else:
         out = flash_decode_paged_pallas(q.reshape(B, H, hd), kp, vp, pt,
-                                        pos, window=window, offsets=offsets)
+                                        pos, window=window, offsets=offsets,
+                                        k_scale=k_scale, v_scale=v_scale,
+                                        rope_theta=rope_theta)
     return out.reshape(B, 1, H, hd)
 
 
@@ -298,3 +321,203 @@ def _mamba_chunk_bwd(res, cts):
 
 
 mamba_chunk.defvjp(_mamba_chunk_fwd, _mamba_chunk_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fused RoPE attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash_attention_rope(q: jax.Array, k: jax.Array, v: jax.Array,
+                          pos: jax.Array, theta: float, causal: bool,
+                          window: Optional[int], block_q: int,
+                          block_k: int) -> jax.Array:
+    return flash_attention_rope_pallas(
+        q, k, v, pos, theta=theta, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def _flash_rope_fwd(q, k, v, pos, theta, causal, window, block_q, block_k):
+    out, lse = flash_attention_rope_pallas(
+        q, k, v, pos, theta=theta, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, return_residuals=True,
+        interpret=_interpret())
+    # residuals: the UNROTATED inputs (the backward re-rotates them — one
+    # cheap elementwise pass), positions, output, and the logsumexp
+    return out, (q, k, v, pos, out, lse)
+
+
+def _flash_rope_bwd(theta, causal, window, block_q, block_k, res, do):
+    q, k, v, pos, out, lse = res
+    dq, dk, dv = flash_attention_rope_backward_pallas(
+        q, k, v, pos, out, lse, do, theta=theta, causal=causal,
+        window=window, block_q=block_q, block_k=block_k,
+        interpret=_interpret())
+    # positions are integral sampling points, not a continuous parameter
+    return dq, dk, dv, jnp.zeros_like(pos)
+
+
+_flash_attention_rope.defvjp(_flash_rope_fwd, _flash_rope_bwd)
+
+
+def flash_attention_rope(q: jax.Array, k: jax.Array, v: jax.Array,
+                         positions: jax.Array, *, theta: float,
+                         causal: bool = True,
+                         window: Optional[int] = None) -> jax.Array:
+    """Flash attention with RoPE fused into the q/k loads — the model-layout
+    adapter: q (B, T, H, hd); k, v (B, T, KV, hd) UNROTATED; ``positions``
+    broadcastable to (B, T) -> (B, T, H, hd). Replaces the separate
+    ``apply_rope`` passes over q and k in the attention hot path.
+
+    Differentiable via ``jax.custom_vjp``
+    (:func:`repro.kernels.flash_attention.flash_attention_rope_backward_pallas`),
+    validated against :func:`repro.kernels.ref.attention_rope_vjp_ref`.
+    """
+    B, T = q.shape[0], q.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(positions, jnp.float32), (B, T))
+    out = _flash_attention_rope(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                v.swapaxes(1, 2), pos, theta, causal,
+                                window, DEFAULT_BLOCK_Q, DEFAULT_BLOCK_K)
+    return out.swapaxes(1, 2)
+
+
+# ---------------------------------------------------------------------------
+# fused row kernels (rmsnorm_residual, swiglu)
+# ---------------------------------------------------------------------------
+
+# widest whole-axis lane block the fused row kernels will take — their row
+# blocks keep the full feature axis on the lane dimension
+_MAX_FUSED_LANE = 8192
+
+
+def _fused_tile(dim: int, kind: str) -> Optional[int]:
+    """Feature-axis gate for the fused row kernels: the axis rides whole on
+    the LANE dimension of each block, so it must be a 128-multiple and
+    within a VMEM bound — otherwise the op falls back to the jnp oracle
+    with a one-time warning (never a silent mis-tile)."""
+    if dim % 128 == 0 and dim <= _MAX_FUSED_LANE:
+        return dim
+    if dim % 128:
+        _warn_once(dim, kind,
+                   f"{kind}: feature dim {dim} is not a 128-multiple; "
+                   f"falling back to the jnp oracle (no kernel coverage)")
+    else:
+        _warn_once(dim, kind,
+                   f"{kind}: feature dim {dim} exceeds the "
+                   f"{_MAX_FUSED_LANE}-lane VMEM bound; falling back to the "
+                   f"jnp oracle (no kernel coverage)")
+    return None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _rmsnorm_residual(x: jax.Array, r: jax.Array, scale: jax.Array,
+                      eps: float) -> Tuple[jax.Array, jax.Array]:
+    # off-TPU the fused jnp composition (XLA fuses the single pass) IS the
+    # fast lowering — interpret-mode Pallas only re-runs it per grid step.
+    # The kernel pair is the TPU path; tests drive it via interpret=True.
+    d = x.shape[-1]
+    if _fused_tile(d, "rmsnorm_residual") is None or _interpret():
+        return ref.rmsnorm_residual_ref(x, r, scale, eps)
+    shp = x.shape
+    y, s = rmsnorm_residual_pallas(x.reshape(-1, d), r.reshape(-1, d),
+                                   scale, eps=eps)
+    return y.reshape(shp), s.reshape(shp)
+
+
+def _rmsnorm_residual_fwd(x, r, scale, eps):
+    y, s = _rmsnorm_residual(x, r, scale, eps)
+    # residuals: the summed stream s (live anyway — it IS the second
+    # output) and scale; x and r are never needed again
+    return (y, s), (s, scale)
+
+
+def _rmsnorm_residual_bwd(eps, res, cts):
+    s, scale = res
+    dy, ds = cts
+    d = s.shape[-1]
+    if _fused_tile(d, "rmsnorm_residual") is None or _interpret():
+        # the forward used the oracle; its output depends on (x, r) only
+        # through s = x + r, so re-linearize at (x=s, r=0)
+        dx, _, dscale = ref.rmsnorm_residual_vjp_ref(
+            s, jnp.zeros_like(s), scale, (dy, ds), eps)
+        return dx, dx, dscale.astype(scale.dtype)
+    dx, dscale = rmsnorm_residual_backward_pallas(
+        s.reshape(-1, d), scale, dy.reshape(-1, d), ds.reshape(-1, d),
+        eps=eps)
+    dx = dx.reshape(s.shape)
+    # the residual add fans the cotangent out equally: dr == dx
+    return dx, dx, dscale.astype(scale.dtype)
+
+
+_rmsnorm_residual.defvjp(_rmsnorm_residual_fwd, _rmsnorm_residual_bwd)
+
+
+def rmsnorm_residual(x: jax.Array, r: jax.Array, scale: jax.Array, *,
+                     eps: float = 1e-6) -> Tuple[jax.Array, jax.Array]:
+    """Fused residual-add + RMSNorm: returns ``(rmsnorm(x + r) * scale,
+    x + r)`` — the normed activations and the new residual stream — in one
+    pass over (..., d). Differentiable via ``jax.custom_vjp``
+    (:func:`repro.kernels.fused_norm.rmsnorm_residual_backward_pallas`),
+    validated against :func:`repro.kernels.ref.rmsnorm_residual_vjp_ref`.
+    Non-128-multiple ``d`` falls back to the oracle (one-time warning).
+    """
+    return _rmsnorm_residual(x, r, scale, eps)
+
+
+@jax.custom_vjp
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array) -> jax.Array:
+    """Fused SwiGLU front half: ``silu(x @ wg) * (x @ wu)`` over (..., d)
+    with one pass over x and a single saved hidden activation (the gate
+    pre-activation; the up projection is recomputed by the backward).
+    Differentiable via ``jax.custom_vjp``
+    (:func:`repro.kernels.swiglu.swiglu_backward_pallas`), validated
+    against :func:`repro.kernels.ref.swiglu_vjp_ref`. Non-128-multiple
+    ``d``/hidden dims fall back to the oracle (one-time warning).
+    """
+    h, _ = _swiglu_impl(x, wg, wu)
+    return h
+
+
+def _swiglu_impl(x, wg, wu):
+    # same off-TPU discipline as _rmsnorm_residual: jnp lowering off-TPU
+    # (the tile gate still runs first so misaligned dims warn everywhere),
+    # Pallas pair on TPU.
+    d, F = wg.shape
+    aligned = (_fused_tile(d, "swiglu") is not None
+               and _fused_tile(F, "swiglu") is not None)
+    if not aligned or _interpret():
+        # single concatenated GEMM (one pass over x, gate in the epilogue);
+        # XLA CPU lowers the naive two-GEMM composition measurably slower.
+        dt = x.dtype
+        gu = x @ jnp.concatenate([wg, wu], axis=1).astype(dt)
+        g, u = jnp.split(gu, 2, axis=-1)
+        return (jax.nn.silu(g) * u).astype(dt), None  # no gate residual
+    shp = x.shape
+    h, g = swiglu_pallas(x.reshape(-1, d), wg, wu)
+    return h.reshape(shp[:-1] + (F,)), g
+
+
+def _swiglu_fwd(x, wg, wu):
+    h, g = _swiglu_impl(x, wg, wu)
+    # residuals: inputs + the (N, F) gate pre-activation (None on the
+    # oracle path — shape-static decision mirrored in the backward)
+    return h, (x, wg, wu, g)
+
+
+def _swiglu_bwd(res, dh):
+    x, wg, wu, g = res
+    if g is None:
+        return ref.swiglu_vjp_ref(x, wg, wu, dh)
+    d, F = wg.shape
+    x2 = x.reshape(-1, d)
+    dx, dg, du = swiglu_backward_pallas(x2, wg, wu, g, dh.reshape(-1, F))
+    # weight grads are plain GEMMs over the full dg/du — nothing to fuse
+    dwg = jnp.dot(x2.T.astype(jnp.float32),
+                  dg.astype(jnp.float32)).astype(wg.dtype)
+    dwu = jnp.dot(x2.T.astype(jnp.float32),
+                  du.astype(jnp.float32)).astype(wu.dtype)
+    return dx.astype(x.dtype).reshape(x.shape), dwg, dwu
+
+
+swiglu.defvjp(_swiglu_fwd, _swiglu_bwd)

@@ -130,19 +130,137 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 def flash_decode_paged_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
                            pt: jax.Array, pos: jax.Array, *,
                            window: Optional[int] = None,
-                           offsets: Optional[jax.Array] = None) -> jax.Array:
+                           offsets: Optional[jax.Array] = None,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None) -> jax.Array:
     """Paged-cache decode oracle: gather each row's pages into a contiguous
     (B, KV, n_blocks*page_size, hd) cache and defer to
     :func:`flash_decode_ref` — the thing the paged kernel exists to avoid
     doing, which is exactly what makes it the oracle. kp, vp:
-    (n_pages, KV, page_size, hd); pt: (B, n_blocks)."""
+    (n_pages, KV, page_size, hd); pt: (B, n_blocks).
+
+    ``k_scale``/``v_scale`` (n_pages, KV, page_size) dequantize an int8
+    pool: the stored value is ``round(k / scale)`` and the oracle
+    materialises ``kp * scale`` up front — the full-precision gather the
+    in-kernel dequant exists to avoid."""
     B = q.shape[0]
     KV, ps, hd = kp.shape[1], kp.shape[2], kp.shape[3]
     NB = pt.shape[1]
+    if k_scale is not None:
+        kp = kp.astype(jnp.float32) * k_scale[..., None]
+        vp = vp.astype(jnp.float32) * v_scale[..., None]
+        kp = kp.astype(q.dtype)
+        vp = vp.astype(q.dtype)
     k = kp[pt].transpose(0, 2, 1, 3, 4).reshape(B, KV, NB * ps, hd)
     v = vp[pt].transpose(0, 2, 1, 3, 4).reshape(B, KV, NB * ps, hd)
     return flash_decode_ref(q, k, v, pos, window=window, ring=False,
                             offsets=offsets)
+
+
+# ---------------------------------------------------------------------------
+# rotary embedding / fused-RoPE attention oracle
+# ---------------------------------------------------------------------------
+
+
+def rope_ref(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Head-major half-rotation RoPE: x (B, H, T, hd), pos (B, T).
+
+    Mirrors ``models.layers.apply_rope`` (llama convention:
+    ``freqs_i = theta ** -(i / (hd/2))``) on the kernel layout; the fused
+    attention/decode kernels rotate q/k on load against this."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[:, None, :, None] * freqs  # (B,1,T,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(dt)
+
+
+def attention_rope_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                       pos: jax.Array, *, theta: float,
+                       causal: bool = True,
+                       window: Optional[int] = None) -> jax.Array:
+    """Oracle for the RoPE-fused flash attention: the unfused composition
+    ``attention_ref(rope(q), rope(k), v)`` the kernel folds into one pass.
+    q: (B, H, T, hd); k, v: (B, KV, T, hd); pos: (B, T) shared q/k
+    positions (self-attention)."""
+    return attention_ref(rope_ref(q, pos, theta), rope_ref(k, pos, theta),
+                         v, causal=causal, window=window)
+
+
+def attention_rope_vjp_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                           pos: jax.Array, do: jax.Array, *, theta: float,
+                           causal: bool = True,
+                           window: Optional[int] = None
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle VJP of :func:`attention_rope_ref` w.r.t. (q, k, v):
+    autodiff of the unfused jnp composition."""
+    def f(q_, k_, v_):
+        return attention_rope_ref(q_, k_, v_, pos, theta=theta,
+                                  causal=causal, window=window)
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(do)
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm + residual oracle
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_residual_ref(x: jax.Array, r: jax.Array, scale: jax.Array,
+                         eps: float = 1e-6
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Fused residual-add + RMSNorm oracle: ``s = x + r`` (the new residual
+    stream) and ``y = rmsnorm(s) * scale``, both in one pass.
+
+    x, r: (..., d); scale: (d,). Mirrors ``models.layers.rmsnorm_apply``
+    (f32 compute, cast back to the input dtype). Returns (y, s)."""
+    dt = x.dtype
+    s = x + r
+    sf = s.astype(jnp.float32)
+    var = jnp.mean(jnp.square(sf), axis=-1, keepdims=True)
+    y = sf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(dt), s
+
+
+def rmsnorm_residual_vjp_ref(x: jax.Array, r: jax.Array, scale: jax.Array,
+                             cts: Tuple[jax.Array, jax.Array],
+                             eps: float = 1e-6) -> Tuple[jax.Array, ...]:
+    """Oracle VJP of :func:`rmsnorm_residual_ref` w.r.t. (x, r, scale):
+    autodiff of the jnp oracle. ``cts = (dy, ds)`` — both forward outputs
+    are live (``s`` feeds the next residual add)."""
+    _, vjp = jax.vjp(lambda a, b, c: rmsnorm_residual_ref(a, b, c, eps),
+                     x, r, scale)
+    return vjp(cts)
+
+
+# ---------------------------------------------------------------------------
+# fused SwiGLU oracle
+# ---------------------------------------------------------------------------
+
+
+def swiglu_ref(x: jax.Array, wg: jax.Array, wu: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Fused SwiGLU oracle: ``h = silu(x @ wg) * (x @ wu)`` plus the single
+    hidden-activation residual ``g = x @ wg`` the backward keeps (``u`` is
+    recomputed). x: (..., d); wg, wu: (d, f). Returns (h, g)."""
+    dt = x.dtype
+    g = x @ wg.astype(dt)
+    u = x @ wu.astype(dt)
+    return jax.nn.silu(g) * u, g
+
+
+def swiglu_vjp_ref(x: jax.Array, wg: jax.Array, wu: jax.Array,
+                   dh: jax.Array) -> Tuple[jax.Array, ...]:
+    """Oracle VJP of the SwiGLU output ``h`` w.r.t. (x, wg, wu): autodiff
+    of the jnp composition (``g`` is an internal residual, not a
+    user-visible output — its cotangent is zero)."""
+    _, vjp = jax.vjp(lambda a, b, c: swiglu_ref(a, b, c)[0], x, wg, wu)
+    return vjp(dh)
 
 
 # ---------------------------------------------------------------------------

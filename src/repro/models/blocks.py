@@ -72,17 +72,20 @@ def block_init(rng, cfg: ModelConfig, spec: LayerSpec, dtype=jnp.float32
 def block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int,
                 memory_len: int = 0, dtype=jnp.bfloat16,
                 layout: str = "seq", page_size: int = 64,
-                total_pages: Optional[int] = None) -> Params:
+                total_pages: Optional[int] = None,
+                cache_dtype: Optional[str] = None) -> Params:
     """Decode-time cache for one block. ``layout`` picks the KV cache
     layout: "seq" (B, S, kv, hd), "head" (B, kv, S, hd) — the flash-decode
     kernel's native layout — or "paged" (page pool + per-row block tables;
-    SWA layers keep their head-major ring). See ``layers.init_kv_cache``."""
+    SWA layers keep their head-major ring). ``cache_dtype="int8"``
+    quantizes the paged pool per slot (see ``layers.init_kv_cache``)."""
     c: Params = {}
     if spec.mixer in ("attn", "swa"):
         window = cfg.sliding_window if spec.mixer == "swa" else None
         c["attn"] = L.init_kv_cache(cfg, batch, max_len, window, dtype,
                                     layout=layout, page_size=page_size,
-                                    total_pages=total_pages)
+                                    total_pages=total_pages,
+                                    cache_dtype=cache_dtype)
     elif spec.mixer == "ssm":
         c["ssm"] = SSM.init_ssm_cache(cfg, batch)
     if spec.cross_attn:
@@ -128,53 +131,63 @@ def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
             y = L.cross_attention_apply(params["cross"], cfg, h, k, v)
         x = x + y
 
+    y_mix = None                 # mixer output, residual-add deferred to ff
     if spec.mixer in ("attn", "swa"):
         window = cfg.sliding_window if spec.mixer == "swa" else None
         h = L.norm_apply(cfg, params["norm1"], x)
         if decode:
-            y, kvc = L.attention_decode(params["mixer"], cfg, h,
-                                        cache["attn"], pos, window=window,
-                                        offsets=offsets,
-                                        use_kernels=use_kernels)
+            y_mix, kvc = L.attention_decode(params["mixer"], cfg, h,
+                                            cache["attn"], pos, window=window,
+                                            offsets=offsets,
+                                            use_kernels=use_kernels)
             new_cache["attn"] = kvc
         elif prefill:
-            y, kvc = L.attention_prefill(params["mixer"], cfg, h, positions,
-                                         cache["attn"], window=window,
-                                         offsets=offsets,
-                                         use_kernels=use_kernels)
+            y_mix, kvc = L.attention_prefill(params["mixer"], cfg, h,
+                                             positions, cache["attn"],
+                                             window=window, offsets=offsets,
+                                             use_kernels=use_kernels)
             new_cache["attn"] = kvc
         else:
-            y = L.attention_full(params["mixer"], cfg, h, positions,
-                                 window=window, causal=causal,
-                                 use_kernels=use_kernels)
-        x = x + y
+            y_mix = L.attention_full(params["mixer"], cfg, h, positions,
+                                     window=window, causal=causal,
+                                     use_kernels=use_kernels)
     elif spec.mixer == "ssm":
         h = L.norm_apply(cfg, params["norm1"], x)
         if decode:
-            y, sc = SSM.ssm_decode(params["mixer"], cfg, h, cache["ssm"])
+            y_mix, sc = SSM.ssm_decode(params["mixer"], cfg, h, cache["ssm"])
             new_cache["ssm"] = sc
         elif prefill:
             valid = None
             if offsets is not None:
                 valid = jnp.arange(x.shape[1])[None] >= offsets[:, None]
-            y, sc = SSM.ssm_prefill(params["mixer"], cfg, h, valid=valid,
-                                    use_kernels=use_kernels)
+            y_mix, sc = SSM.ssm_prefill(params["mixer"], cfg, h, valid=valid,
+                                        use_kernels=use_kernels)
             old = cache["ssm"]
             new_cache["ssm"] = {"h": sc["h"].astype(old["h"].dtype),
                                 "conv": sc["conv"].astype(old["conv"].dtype)}
         else:
-            y = SSM.ssm_forward(params["mixer"], cfg, h,
-                                use_kernels=use_kernels)
-        x = x + y
+            y_mix = SSM.ssm_forward(params["mixer"], cfg, h,
+                                    use_kernels=use_kernels)
 
     if spec.ff == "dense":
-        h = L.norm_apply(cfg, params["norm2"], x)
-        x = x + L.mlp_apply(params["ff"], h)
+        # Fuse the mixer residual add with the ff pre-norm: one pass over
+        # the stream instead of add-then-norm (no-op reassociation when
+        # use_kernels is off or the norm isn't rmsnorm).
+        if y_mix is not None:
+            h, x = L.norm_residual_apply(cfg, params["norm2"], x, y_mix,
+                                         use_kernels=use_kernels)
+        else:
+            h = L.norm_apply(cfg, params["norm2"], x)
+        x = x + L.mlp_apply(params["ff"], h, use_kernels=use_kernels)
     elif spec.ff == "moe":
+        if y_mix is not None:
+            x = x + y_mix
         h = L.norm_apply(cfg, params["norm2"], x)
         y, moe_aux = MOE.moe_apply(params["ff"], cfg, h)
         aux.update(moe_aux)
         x = x + y
+    elif y_mix is not None:
+        x = x + y_mix
 
     return x, new_cache, aux
 
@@ -202,11 +215,12 @@ def stack_init(rng, cfg: ModelConfig, dtype=jnp.float32) -> Params:
 def stack_cache(cfg: ModelConfig, batch: int, max_len: int,
                 memory_len: int = 0, dtype=jnp.bfloat16,
                 layout: str = "seq", page_size: int = 64,
-                total_pages: Optional[int] = None) -> Params:
+                total_pages: Optional[int] = None,
+                cache_dtype: Optional[str] = None) -> Params:
     def one(spec):
         return block_cache(cfg, spec, batch, max_len, memory_len, dtype,
                            layout, page_size=page_size,
-                           total_pages=total_pages)
+                           total_pages=total_pages, cache_dtype=cache_dtype)
 
     def stacked(spec):
         c = one(spec)

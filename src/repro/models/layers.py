@@ -79,6 +79,21 @@ def norm_apply(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
     return rmsnorm_apply(params, x, cfg.norm.eps)
 
 
+def norm_residual_apply(cfg: ModelConfig, params: Params, x: jax.Array,
+                        r: jax.Array, *, use_kernels: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Fused sublayer seam: residual add + pre-norm in one pass. Returns
+    ``(norm(x + r) * scale, x + r)`` — the normed input of the next sublayer
+    and the new residual stream. The fused Pallas kernel
+    (:func:`repro.kernels.ops.rmsnorm_residual`) only covers rmsnorm; the
+    layernorm configs take the unfused two-pass path."""
+    if use_kernels and cfg.norm.kind == "rmsnorm":
+        from repro.kernels import ops as kops
+        return kops.rmsnorm_residual(x, r, params["scale"], eps=cfg.norm.eps)
+    s = x + r
+    return norm_apply(cfg, params, s), s
+
+
 # ---------------------------------------------------------------------------
 # rotary position embedding (half-rotation / llama convention)
 # ---------------------------------------------------------------------------
@@ -259,11 +274,17 @@ def attention_full(params: Params, cfg: ModelConfig, x: jax.Array,
                    use_kernels: bool = False) -> jax.Array:
     """Self-attention over a full sequence (training / prefill)."""
     B, T, _ = x.shape
-    q, k, v = _project_qkv(params, cfg, x, positions)
     if use_kernels and causal and segment_mask is None:
         from repro.kernels import ops as kops
-        out = kops.flash_attention(q, k, v, causal=True, window=window)
-    elif window is not None and causal and T > 2 * window and segment_mask is None:
+        # RoPE rides inside the kernel's q/k loads (no separate apply_rope
+        # pass over the full (B, T, H, hd) tensors)
+        q, k, v = _project_qkv(params, cfg, x, positions, rope=False)
+        out = kops.flash_attention_rope(q, k, v, positions,
+                                        theta=cfg.rope_theta, causal=True,
+                                        window=window)
+        return out.reshape(B, T, -1) @ params["wo"].astype(x.dtype)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if window is not None and causal and T > 2 * window and segment_mask is None:
         out = _local_attention(q, k, v, window, x.dtype)
     else:
         if causal:
@@ -283,7 +304,8 @@ def attention_full(params: Params, cfg: ModelConfig, x: jax.Array,
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   window: Optional[int] = None, dtype=jnp.bfloat16,
                   layout: str = "seq", page_size: int = 64,
-                  total_pages: Optional[int] = None) -> Params:
+                  total_pages: Optional[int] = None,
+                  cache_dtype: Optional[str] = None) -> Params:
     """KV cache for one attention layer. SWA layers use a ring buffer of
     ``window`` slots; full layers allocate ``max_len``.
 
@@ -302,12 +324,34 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
     fall back to the head-major ring (a window-bounded ring is already its
     own worst case — paging it buys nothing). The key names carry the
     layout, so every consumer can self-describe instead of threading a
-    flag."""
+    flag.
+
+    ``cache_dtype="int8"`` (paged only; other layouts raise) stores the
+    page pool as int8 codes with per-slot f32 scales ``ks``/``vs``
+    (pages, kv, page_size) — half the pool payload per slot, so the same
+    pool memory holds ~2x the rows; decode dequantizes inside the kernel
+    (see docs/serving.md for the accuracy trade-off). SWA layers riding a
+    paged cache keep their full-precision head-major ring (the
+    window-bounded ring is small; quantizing it buys ~nothing)."""
+    if cache_dtype not in (None, "int8"):
+        raise ValueError(f"unknown cache_dtype: {cache_dtype!r}")
+    if cache_dtype == "int8" and layout != "paged":
+        raise ValueError(
+            "cache_dtype='int8' requires layout='paged' (the contiguous "
+            "layouts have no per-slot scale planes)")
     S = min(max_len, window) if window is not None else max_len
     kv, hd = cfg.n_kv_heads, cfg.head_dim
     if layout == "paged" and window is None:
         nb = -(-max_len // page_size)
         pages = total_pages if total_pages is not None else 1 + batch * nb
+        if cache_dtype == "int8":
+            return {
+                "kp": jnp.zeros((pages, kv, page_size, hd), dtype=jnp.int8),
+                "vp": jnp.zeros((pages, kv, page_size, hd), dtype=jnp.int8),
+                "ks": jnp.zeros((pages, kv, page_size), dtype=jnp.float32),
+                "vs": jnp.zeros((pages, kv, page_size), dtype=jnp.float32),
+                "pt": jnp.zeros((batch, nb), dtype=jnp.int32),
+            }
         return {
             "kp": jnp.zeros((pages, kv, page_size, hd), dtype=dtype),
             "vp": jnp.zeros((pages, kv, page_size, hd), dtype=dtype),
@@ -384,26 +428,64 @@ def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
         positions = posb[:, None]
     else:
         positions = (posb - offsets)[:, None].astype(jnp.int32)
-    q, k, v = _project_qkv(params, cfg, x, positions)
+    # kernel paths fuse the query rotation into the decode kernel
+    # (rope_theta below) — only the cached key still needs its write-time
+    # rotation here; the non-kernel paths rotate both as before
+    q, k, v = _project_qkv(params, cfg, x, positions, rope=not use_kernels)
+    if use_kernels:
+        k = apply_rope(k, positions, cfg.rope_theta)
 
     if "pt" in cache:                  # paged pool + per-row block tables
         from repro.kernels import ops as kops
         from repro.kernels.flash_decode import _slot_visibility
         kp, vp, pt = cache["kp"], cache["vp"], cache["pt"]
+        quantized = "ks" in cache
         ps, NB = kp.shape[2], pt.shape[1]
         b_idx = jnp.arange(B)
         page = pt[b_idx, jnp.clip(posb // ps, 0, NB - 1)]   # (B,)
-        kp = kp.at[page, :, posb % ps].set(k[:, 0].astype(kp.dtype))
-        vp = vp.at[page, :, posb % ps].set(v[:, 0].astype(vp.dtype))
-        new_cache = {"kp": kp, "vp": vp, "pt": pt}
+        if quantized:
+            # per-slot symmetric int8: one f32 scale per (row, kv head),
+            # chosen so the largest |component| maps to 127
+            kw, vw = k[:, 0], v[:, 0]                       # (B, kv, hd)
+            ksc = jnp.maximum(jnp.abs(kw).max(axis=-1), 1e-8) / 127.0
+            vsc = jnp.maximum(jnp.abs(vw).max(axis=-1), 1e-8) / 127.0
+            kq = jnp.clip(jnp.round(kw / ksc[..., None]),
+                          -127, 127).astype(jnp.int8)
+            vq = jnp.clip(jnp.round(vw / vsc[..., None]),
+                          -127, 127).astype(jnp.int8)
+            kp = kp.at[page, :, posb % ps].set(kq)
+            vp = vp.at[page, :, posb % ps].set(vq)
+            ks_ = cache["ks"].at[page, :, posb % ps].set(
+                ksc.astype(jnp.float32))
+            vs_ = cache["vs"].at[page, :, posb % ps].set(
+                vsc.astype(jnp.float32))
+            new_cache = {"kp": kp, "vp": vp, "ks": ks_, "vs": vs_, "pt": pt}
+        else:
+            kp = kp.at[page, :, posb % ps].set(k[:, 0].astype(kp.dtype))
+            vp = vp.at[page, :, posb % ps].set(v[:, 0].astype(vp.dtype))
+            new_cache = {"kp": kp, "vp": vp, "pt": pt}
         if use_kernels:
-            out = kops.flash_decode_paged(
-                q, kp.astype(q.dtype), vp.astype(q.dtype), pt, posb,
-                window=window, offsets=offsets)
+            if quantized:
+                out = kops.flash_decode_paged(
+                    q, kp, vp, pt, posb, window=window, offsets=offsets,
+                    k_scale=new_cache["ks"], v_scale=new_cache["vs"],
+                    rope_theta=cfg.rope_theta)
+            else:
+                out = kops.flash_decode_paged(
+                    q, kp.astype(q.dtype), vp.astype(q.dtype), pt, posb,
+                    window=window, offsets=offsets,
+                    rope_theta=cfg.rope_theta)
         else:
             S = NB * ps
             kg = kp[pt].transpose(0, 2, 1, 3, 4).reshape(B, kv, S, hd)
             vg = vp[pt].transpose(0, 2, 1, 3, 4).reshape(B, kv, S, hd)
+            if quantized:
+                ksg = new_cache["ks"][pt].transpose(0, 2, 1, 3) \
+                    .reshape(B, kv, S, 1)
+                vsg = new_cache["vs"][pt].transpose(0, 2, 1, 3) \
+                    .reshape(B, kv, S, 1)
+                kg = (kg.astype(jnp.float32) * ksg).astype(q.dtype)
+                vg = (vg.astype(jnp.float32) * vsg).astype(q.dtype)
             m = _slot_visibility(
                 jnp.arange(S)[None, :], posb[:, None], seq_k=S,
                 window=window, ring=False,
@@ -442,7 +524,7 @@ def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
         vhm = cv if head_major else cv.swapaxes(1, 2)
         out = kops.flash_decode(q, khm.astype(q.dtype), vhm.astype(q.dtype),
                                 kernel_pos, window=window, ring=ring,
-                                offsets=offsets)
+                                offsets=offsets, rope_theta=cfg.rope_theta)
     else:
         valid = _cache_valid_mask(kernel_pos, S, ring=ring, offsets=offsets)
         m = jnp.broadcast_to(valid[None, None, :] if valid.ndim == 1
@@ -550,9 +632,17 @@ def mlp_init(rng, d: int, d_ff: int, dtype=jnp.float32) -> Params:
     }
 
 
-def mlp_apply(params: Params, x: jax.Array) -> jax.Array:
+def mlp_apply(params: Params, x: jax.Array,
+              use_kernels: bool = False) -> jax.Array:
     dt = x.dtype
     hid = ("dp",) + (None,) * (x.ndim - 2) + ("model",)
+    if use_kernels:
+        from repro.kernels import ops as kops
+        # fused gate GEMM + up GEMM + silu product, single saved hidden
+        # activation (docs/kernels.md: swiglu)
+        h = hint(kops.swiglu(x, params["w_gate"].astype(dt),
+                             params["w_up"].astype(dt)), *hid)
+        return h @ params["w_down"].astype(dt)
     g = hint(jax.nn.silu(x @ params["w_gate"].astype(dt)), *hid)
     u = hint(x @ params["w_up"].astype(dt), *hid)
     return (g * u) @ params["w_down"].astype(dt)

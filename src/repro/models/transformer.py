@@ -137,16 +137,21 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                memory_len: int = 0, dtype=jnp.bfloat16,
                layout: str = "seq", page_size: int = 64,
-               total_pages: Optional[int] = None) -> Params:
+               total_pages: Optional[int] = None,
+               cache_dtype: Optional[str] = None) -> Params:
     """``layout="head"`` builds the flash-decode kernel's native head-major
     KV caches (serving ``use_kernels=True``); "seq" is the classic
     (B, S, kv, hd) layout the grouped-einsum decode and sharding rules
     expect; "paged" gives full-attention layers a physical page pool +
     per-row block tables (``page_size`` slots per page, ``total_pages``
     including the reserved trash page 0) for the continuous-batching
-    engine — SWA ring and SSM/cross caches are unchanged by it."""
+    engine — SWA ring and SSM/cross caches are unchanged by it.
+    ``cache_dtype="int8"`` stores the paged pool as per-slot symmetric
+    int8 codes plus f32 scale planes (``ks``/``vs``), halving the kp/vp
+    payload so the same pool memory holds twice the slots."""
     return B.stack_cache(cfg, batch, max_len, memory_len, dtype, layout,
-                         page_size=page_size, total_pages=total_pages)
+                         page_size=page_size, total_pages=total_pages,
+                         cache_dtype=cache_dtype)
 
 
 def memory_len(cfg: ModelConfig, seq_len: int) -> int:

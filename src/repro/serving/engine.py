@@ -257,6 +257,25 @@ def _is_stacked(p: str) -> bool:
     return "body" in p.split("/")
 
 
+def _page_blocks(src: jax.Array, ps: int, stacked: bool) -> jax.Array:
+    """Gather a batch-1 head-major kh/vh leaf into page-sized blocks:
+    (nb, kv, ps, hd), with a leading repeats dim when ``stacked``."""
+    if stacked:
+        t = src[:, 0]                             # (R, kv, S, hd)
+        R, kv, S, hd = t.shape
+        return t.reshape(R, kv, S // ps, ps, hd).swapaxes(1, 2)
+    t = src[0]                                    # (kv, S, hd)
+    kv, S, hd = t.shape
+    return t.reshape(kv, S // ps, ps, hd).swapaxes(0, 1)
+
+
+def _slot_scales(blocks: jax.Array) -> jax.Array:
+    """Per-slot symmetric int8 scales over the head dim (matches the
+    quantized decode write in ``layers.attention_decode``)."""
+    a = jnp.abs(blocks.astype(jnp.float32)).max(axis=-1)
+    return jnp.maximum(a, 1e-8) / 127.0
+
+
 def _scatter_admit(cache: Params, tmp: Params, slot: jax.Array,
                    pages: jax.Array) -> Params:
     """Scatter a freshly prefilled batch-1 contiguous cache ``tmp`` into
@@ -267,7 +286,9 @@ def _scatter_admit(cache: Params, tmp: Params, slot: jax.Array,
     page-sized blocks and scatter them at ``pages`` (the row's freshly
     assigned block table, trash page 0 for blocks past the prompt — those
     slots are masked until decode writes them); ``pt`` rows are set to
-    ``pages``. Stacked body leaves carry a leading repeats dim.
+    ``pages``. int8 pools quantize the gathered blocks per slot on the way
+    in and write the matching scale planes at ``ks``/``vs``. Stacked body
+    leaves carry a leading repeats dim.
     """
     tmp_flat = {
         _tree_path_str(path): leaf
@@ -281,16 +302,19 @@ def _scatter_admit(cache: Params, tmp: Params, slot: jax.Array,
                     else leaf.at[slot].set(pages))
         if p.endswith("/kp") or p.endswith("/vp"):
             src = tmp_flat[p[:-2] + ("kh" if p.endswith("/kp") else "vh")]
-            ps = leaf.shape[-2]
+            blocks = _page_blocks(src, leaf.shape[-2], stacked)
+            if leaf.dtype == jnp.int8:
+                bf = blocks.astype(jnp.float32)
+                sc = _slot_scales(blocks)
+                blocks = jnp.clip(jnp.round(bf / sc[..., None]), -127, 127)
             if stacked:
-                t = src[:, 0]                         # (R, kv, S, hd)
-                R, kv, S, hd = t.shape
-                blocks = t.reshape(R, kv, S // ps, ps, hd).swapaxes(1, 2)
                 return leaf.at[:, pages].set(blocks.astype(leaf.dtype))
-            t = src[0]                                # (kv, S, hd)
-            kv, S, hd = t.shape
-            blocks = t.reshape(kv, S // ps, ps, hd).swapaxes(0, 1)
             return leaf.at[pages].set(blocks.astype(leaf.dtype))
+        if p.endswith("/ks") or p.endswith("/vs"):
+            src = tmp_flat[p[:-2] + ("kh" if p.endswith("/ks") else "vh")]
+            sc = _slot_scales(_page_blocks(src, leaf.shape[-1], stacked))
+            return (leaf.at[:, pages].set(sc) if stacked
+                    else leaf.at[pages].set(sc))
         src = tmp_flat[p]
         if stacked:
             return leaf.at[:, slot].set(src[:, 0].astype(leaf.dtype))
@@ -333,6 +357,13 @@ class ContinuousEngine:
     visibility mask excludes, so survivors are bit-exact vs running each
     request alone (the equality tests assert exactly that).
 
+    ``cache_dtype="int8"`` quantizes the paged pool per slot (symmetric
+    over the head dim, f32 ``ks``/``vs`` scale planes): kp/vp payload
+    bytes halve vs bf16, so the same pool memory holds twice the decode
+    slots; admission quantizes the prefilled blocks on scatter and the
+    decode kernels dequantize at load (see docs/serving.md for the
+    accuracy trade-off).
+
     Host/device split: ``pos``/``active``/block tables/the arrival queue
     live host-side (numpy); the decode step is ONE jitted call per token
     over all slots with the cache donated. Retired rows keep stepping (a
@@ -355,6 +386,7 @@ class ContinuousEngine:
     def __init__(self, params: Params, cfg: ModelConfig, *,
                  num_slots: int, max_len: int, layout: str = "paged",
                  page_size: int = 16, total_pages: Optional[int] = None,
+                 cache_dtype: Optional[str] = None,
                  use_kernels: bool = False, eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
                  rng: Optional[jax.Array] = None, obs=None):
@@ -368,6 +400,7 @@ class ContinuousEngine:
         self.num_slots = num_slots
         self.max_len = max_len
         self.layout = layout
+        self.cache_dtype = cache_dtype
         self.use_kernels = use_kernels
         self.eos_id = eos_id
         self.temperature = temperature
@@ -408,7 +441,8 @@ class ContinuousEngine:
         self.cache = T.init_cache(
             cfg, n, self.max_len, dtype=self.dtype, layout=self.layout,
             page_size=self.page_size or 64,
-            total_pages=self.total_pages or None)
+            total_pages=self.total_pages or None,
+            cache_dtype=self.cache_dtype)
         self.pos = np.zeros((n,), np.int32)
         self.active = np.zeros((n,), bool)
         self._last = jnp.zeros((n, 1), jnp.int32)

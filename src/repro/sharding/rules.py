@@ -198,6 +198,13 @@ def cache_specs(cache: Any, mesh, global_batch: int) -> Any:
                 inner = _spec(mesh, core, None, "model", None, None)
             else:
                 inner = P(*([None] * len(core)))
+        elif re.search(r"/(ks|vs)$", p):  # int8 pool scales: (pages, kv, ps)
+            # co-sharded with the kp/vp pool they dequantize: kv heads on
+            # 'model' when divisible, else replicated.
+            if _fits(core[1], mesh, "model"):
+                inner = _spec(mesh, core, None, "model", None)
+            else:
+                inner = P(*([None] * len(core)))
         elif p.endswith("/pt"):       # block table: (B, n_blocks) int32
             inner = _spec(mesh, core, b_ax, None)
         else:                         # k/v: (B, S, kv, hd)
