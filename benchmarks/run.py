@@ -473,6 +473,54 @@ def mesh_lm_train_step(quick: bool) -> None:
          f"overhead={(t_mesh - t_plain) / t_plain * 100:.1f}%")
 
 
+def _mesh_variant_lm_step(name: str, quick: bool, **kw) -> None:
+    """Shared body for the TP/FSDP train-step benches: the variant step on
+    the degenerate host mesh vs the plain LM step. Single-device the
+    collectives are size-1, so the row prices the sharding-layer plumbing
+    (Megatron fences / param all-gather + grad reduce-scatter + shard-local
+    optimizer) that the real multi-device trajectory starts from — the same
+    basis as ``mesh_lm_train_step``."""
+    from repro.configs.registry import get_config
+    from repro.core import LargeBatchConfig, Regime
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as T
+    from repro.optim import sgd
+    from repro.train.trainer import make_lm_train_step
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32")
+    B, S = (4, 64) if quick else (8, 128)
+    lb = LargeBatchConfig(batch_size=B, base_batch_size=B, grad_clip=1.0)
+    regime = Regime(base_lr=0.01, total_steps=100, drop_every=100)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = sgd.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab_size)}
+    plain = jax.jit(make_lm_train_step(cfg, lb, regime))
+    mesh = jax.jit(make_lm_train_step(cfg, lb, regime,
+                                      mesh=make_host_mesh(), params=params,
+                                      **kw))
+    t_plain = _timeit(lambda: plain(params, opt, batch, jnp.int32(0),
+                                    jax.random.PRNGKey(0))[2]["loss"],
+                      reps=3)
+    t_mesh = _timeit(lambda: mesh(params, opt, batch, jnp.int32(0),
+                                  jax.random.PRNGKey(0))[2]["loss"], reps=3)
+    emit(f"{name}_plain", t_plain, f"B={B},S={S}")
+    emit(name, t_mesh,
+         f"overhead={(t_mesh - t_plain) / t_plain * 100:.1f}%")
+
+
+def mesh_tp_train_step(quick: bool) -> None:
+    """Megatron-in-region tensor-parallel step (tp=True) vs the plain LM
+    step on the host mesh."""
+    _mesh_variant_lm_step("mesh_tp_train_step", quick, tp=True)
+
+
+def mesh_fsdp_train_step(quick: bool) -> None:
+    """FSDP step (fsdp=True: params/opt-state sharded over dp, gathered
+    per step) vs the plain LM step on the host mesh."""
+    _mesh_variant_lm_step("mesh_fsdp_train_step", quick, fsdp=True)
+
+
 def ep_dispatch_2d(quick: bool) -> None:
     """Manual expert-parallel dispatch (shard_map region + combine psum,
     expert_parallel.ep_manual_combine) vs the local scatter/gather fallback
@@ -743,6 +791,8 @@ BENCHES: Dict[str, Callable] = {
     "appendixB_random_potential": appendixB_random_potential,
     "lm_train_step": lm_train_step,
     "mesh_lm_train_step": mesh_lm_train_step,
+    "mesh_tp_train_step": mesh_tp_train_step,
+    "mesh_fsdp_train_step": mesh_fsdp_train_step,
     "ep_dispatch_2d": ep_dispatch_2d,
     "serve_decode_step": serve_decode_step,
     "serve_prefill": serve_prefill,

@@ -37,15 +37,21 @@ if [[ ${#args[@]} -eq 0 ]]; then
   # contracts + trace audit) compile the hot entry points, which overlaps
   # the decode suite's long pole instead of stretching batch B
   batch_a=(tests/test_decode.py tests/test_parallel_2d.py tests/test_serving_continuous.py tests/test_analysis.py tests/test_fused_kernels.py)
+  # batch C: the multi-process jax.distributed tests, under a hard wall
+  # clock — a hung coordinator handshake must fail the suite loudly, not
+  # wedge it (the in-test subprocess waits have their own timeouts; this
+  # is the outer belt-and-braces bound)
+  batch_c=(tests/test_distributed.py)
+  batch_c_timeout=900
   batch_b=()
   for f in tests/test_*.py; do
-    case " ${batch_a[*]} " in
+    case " ${batch_a[*]} ${batch_c[*]} " in
       *" $f "*) ;;
       *) batch_b+=("$f") ;;
     esac
   done
-  log_a=$(mktemp) log_b=$(mktemp)
-  trap 'rm -f "$log_a" "$log_b"' EXIT
+  log_a=$(mktemp) log_b=$(mktemp) log_c=$(mktemp)
+  trap 'rm -f "$log_a" "$log_b" "$log_c"' EXIT
   # repro.obs.trace --label wraps each batch and prints its wall time
   python -m repro.obs --label "batch A" -- \
     python -m pytest -x -q "${batch_a[@]}" >"$log_a" 2>&1 &
@@ -53,13 +59,27 @@ if [[ ${#args[@]} -eq 0 ]]; then
   python -m repro.obs --label "batch B" -- \
     python -m pytest -x -q "${batch_b[@]}" >"$log_b" 2>&1 &
   pid_b=$!
+  timeout --signal=TERM --kill-after=30 "$batch_c_timeout" \
+    python -m repro.obs --label "batch C" -- \
+    python -m pytest -x -q "${batch_c[@]}" >"$log_c" 2>&1 &
+  pid_c=$!
   rc=0
   wait "$pid_a" || rc=$?
   wait "$pid_b" || rc=$?
+  rc_c=0
+  wait "$pid_c" || rc_c=$?
+  if [[ "$rc_c" -ne 0 ]]; then
+    rc=${rc_c}
+    if [[ "${rc_c}" -ge 124 ]]; then
+      echo "batch C exceeded ${batch_c_timeout}s (distributed init hang?)" >>"$log_c"
+    fi
+  fi
   echo "== batch A (${batch_a[*]}) =="
   cat "$log_a"
   echo "== batch B (${#batch_b[@]} files) =="
   cat "$log_b"
+  echo "== batch C (${batch_c[*]}) =="
+  cat "$log_c"
   exit "$rc"
 fi
 exec python -m pytest -x -q "${args[@]}"

@@ -328,6 +328,59 @@ def rule_prng_reuse(tree: ast.AST, relpath: str,
 
 
 # ---------------------------------------------------------------------------
+# rule: axis-name-literal
+# ---------------------------------------------------------------------------
+
+# collective ops whose axis argument is the SECOND positional (value first)
+_COLLECTIVES_ARG1 = {"psum", "pmean", "pmax", "pmin", "all_gather",
+                     "psum_scatter", "all_to_all", "ppermute"}
+# ops whose axis argument is the FIRST positional
+_COLLECTIVES_ARG0 = {"axis_index"}
+
+
+def _has_str_literal(node: ast.AST) -> bool:
+    """A string constant, or a tuple/list literal containing one."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_has_str_literal(e) for e in node.elts)
+    return False
+
+
+def rule_axis_name_literal(tree: ast.AST, relpath: str,
+                           cfg: LintConfig) -> List[Finding]:
+    """Collective axis names must come from the ``launch.mesh`` constants
+    (``POD_AXIS`` / ``DATA_AXIS`` / ``MODEL_AXIS``), not inline strings —
+    a mesh-layout rename must be one edit, not a repo-wide grep. Applies to
+    the axis argument of jax collectives (psum/pmean/all_gather/...), by
+    position or as ``axis_name=``."""
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        attr = node.func.attr
+        if attr in _COLLECTIVES_ARG1:
+            pos = 1
+        elif attr in _COLLECTIVES_ARG0:
+            pos = 0
+        else:
+            continue
+        axis_args = [kw.value for kw in node.keywords
+                     if kw.arg == "axis_name"]
+        if len(node.args) > pos:
+            axis_args.append(node.args[pos])
+        for a in axis_args:
+            if _has_str_literal(a):
+                out.append(Finding(
+                    relpath, node.lineno, "axis-name-literal",
+                    f"string-literal axis name in {attr}() — use the "
+                    f"repro.launch.mesh axis constants (POD_AXIS / "
+                    f"DATA_AXIS / MODEL_AXIS)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 
@@ -338,6 +391,7 @@ RULES: Dict[str, RuleFn] = {
     "host-sync": rule_host_sync,
     "obs-contract": rule_obs_contract,
     "prng-reuse": rule_prng_reuse,
+    "axis-name-literal": rule_axis_name_literal,
 }
 
 CATALOG: Dict[str, str] = {
@@ -346,6 +400,8 @@ CATALOG: Dict[str, str] = {
     "obs-contract": "obs= without None default, or span/metric name "
                     "off the naming grammar",
     "prng-reuse": "PRNG key consumed twice without split/fold_in",
+    "axis-name-literal": "collective axis name spelled as a string literal "
+                         "instead of a launch.mesh constant",
 }
 
 

@@ -2,12 +2,30 @@
 
 Parameters/optimizer pytrees are flattened to path-keyed arrays; on restore
 the arrays are placed back with the caller-provided shardings (device_put
-with a NamedSharding reshards transparently)."""
+with a NamedSharding reshards transparently).
+
+Two save layouts:
+
+- **consolidated** (the default): every leaf is gathered to a full numpy
+  array on the saving host — fine single-process, where ``np.asarray`` on a
+  sharded jax.Array is just a device_get.
+- **sharded** (``save(..., sharded=True)``): each process writes ONLY its
+  addressable shards to its own ``{kind}_{step}.shard{proc}.npz``, with the
+  global index baked into each entry name — no gather, no cross-host
+  traffic, and it works under a multi-process runtime where no single host
+  can even address the full array. ``meta``/``latest`` are written by
+  process 0 only (all hosts save the same step, so the pointer is shared).
+  :func:`restore` finds shard files automatically and reassembles full
+  arrays before placing them with the caller's shardings — which makes
+  restore geometry-free: a checkpoint saved on a (2 data, 2 model) mesh
+  restores onto (4, 1), a different process count, or a single device.
+"""
 from __future__ import annotations
 
+import glob
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,20 +41,63 @@ def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _index_tag(idx: Tuple[slice, ...], shape: Tuple[int, ...]) -> str:
+    """Encode a shard's global index as ``start:stop`` per dim."""
+    parts = []
+    for sl, dim in zip(idx, shape):
+        start = 0 if sl.start is None else sl.start
+        stop = dim if sl.stop is None else sl.stop
+        parts.append(f"{start}:{stop}")
+    return ",".join(parts)
+
+
+def _flatten_shards(tree: Any) -> Dict[str, np.ndarray]:
+    """Path-keyed ADDRESSABLE shards: entry names are
+    ``<leaf-path>##<start:stop,...>`` (deduped per distinct index, so
+    replicated leaves cost one copy per file, not one per device)."""
+    flat: Dict[str, np.ndarray] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards is None:                     # plain numpy / host scalar
+            tag = _index_tag((slice(None),) * np.ndim(leaf), np.shape(leaf))
+            flat[f"{key}##{tag}"] = np.asarray(leaf)
+            continue
+        for sh in shards:
+            tag = _index_tag(sh.index, leaf.shape)
+            name = f"{key}##{tag}"
+            if name not in flat:
+                flat[name] = np.asarray(sh.data)
+    return flat
+
+
 _KIND_PREFIX = {"params": "params", "opt": "opt", "state": "state"}
 
 
 def save(path: str, step: int, params: Any, opt_state: Any = None,
          extra: Optional[Dict[str, Any]] = None,
-         bn_state: Any = None) -> None:
+         bn_state: Any = None, *, sharded: bool = False) -> None:
     os.makedirs(path, exist_ok=True)
-    np.savez(os.path.join(path, f"params_{step}.npz"), **_flatten(params))
+    if sharded:
+        proc = jax.process_index()
+        suffix = f"_{step}.shard{proc}.npz"
+        flatten = _flatten_shards
+    else:
+        proc = 0
+        suffix = f"_{step}.npz"
+        flatten = _flatten
+    np.savez(os.path.join(path, "params" + suffix), **flatten(params))
     if opt_state is not None:
-        np.savez(os.path.join(path, f"opt_{step}.npz"), **_flatten(opt_state))
+        np.savez(os.path.join(path, "opt" + suffix), **flatten(opt_state))
     if bn_state is not None:
-        np.savez(os.path.join(path, f"state_{step}.npz"),
-                 **_flatten(bn_state))
+        np.savez(os.path.join(path, "state" + suffix), **flatten(bn_state))
+    if proc != 0:
+        return
     meta = {"step": step, **(extra or {})}
+    if sharded:
+        meta["sharded"] = True
+        meta["num_processes"] = jax.process_count()
     with open(os.path.join(path, f"meta_{step}.json"), "w") as f:
         json.dump(meta, f)
     # write the pointer last and atomically (temp + rename), so a kill at
@@ -65,15 +126,55 @@ def latest_step(path: str) -> Optional[int]:
         return int(f.read().strip())
 
 
+def _assemble_sharded(files: List[str]) -> Dict[str, np.ndarray]:
+    """Reassemble full arrays from per-process shard files. Every shard
+    carries its global index in the entry name, so assembly is just
+    "allocate max extent, paste each piece" — no mesh/topology knowledge."""
+    pieces: Dict[str, List[Tuple[List[Tuple[int, int]], np.ndarray]]] = {}
+    for fname in files:
+        with np.load(fname) as data:
+            for name in data.files:
+                key, _, tag = name.partition("##")
+                spans = [tuple(int(x) for x in p.split(":"))
+                         for p in tag.split(",")] if tag else []
+                pieces.setdefault(key, []).append((spans, data[name]))
+    out: Dict[str, np.ndarray] = {}
+    for key, parts in pieces.items():
+        spans0, arr0 = parts[0]
+        if not spans0:                                    # 0-d scalar
+            out[key] = arr0
+            continue
+        shape = tuple(max(sp[d][1] for sp, _ in parts)
+                      for d in range(len(spans0)))
+        full = np.zeros(shape, dtype=arr0.dtype)
+        for spans, piece in parts:
+            full[tuple(slice(a, b) for a, b in spans)] = piece
+        out[key] = full
+    return out
+
+
 def restore(path: str, template: Any, *, step: Optional[int] = None,
             kind: str = "params", shardings: Any = None) -> Tuple[Any, int]:
-    """Restore a pytree shaped like ``template``. Returns (tree, step)."""
+    """Restore a pytree shaped like ``template``. Returns (tree, step).
+
+    Looks for the consolidated ``{kind}_{step}.npz`` first, then falls back
+    to globbing ``{kind}_{step}.shard*.npz`` and reassembling — so the
+    caller never needs to know which layout (or mesh geometry, or process
+    count) produced the checkpoint.
+    """
     if step is None:
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {path}")
     fname = os.path.join(path, f"{_KIND_PREFIX[kind]}_{step}.npz")
-    data = np.load(fname)
+    if os.path.exists(fname):
+        data = dict(np.load(fname))
+    else:
+        shard_files = sorted(glob.glob(os.path.join(
+            path, f"{_KIND_PREFIX[kind]}_{step}.shard*.npz")))
+        if not shard_files:
+            raise FileNotFoundError(fname)
+        data = _assemble_sharded(shard_files)
     flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for path_keys, leaf in flat_t:

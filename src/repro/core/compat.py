@@ -6,10 +6,17 @@ renamed ``check_rep`` -> ``check_vma`` along the way. Importing through this
 module keeps every call site working on either side of the move — callers
 pass whichever kwarg name they like and it is translated to what the
 installed jax accepts.
+
+``distributed_initialize`` is the one place the repo touches
+``jax.distributed``: it drops ``None`` arguments (jax's auto-detection
+kwargs changed defaults across 0.4.x) and is idempotent, so a launcher that
+already initialized the runtime (SLURM plugin, test harness) composes with
+library code that defensively calls it again.
 """
 from __future__ import annotations
 
 import inspect
+from typing import Optional
 
 try:                                   # jax >= 0.6: top-level export
     from jax import shard_map as _shard_map  # type: ignore[attr-defined]
@@ -27,3 +34,44 @@ def shard_map(f, **kwargs):
     elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
         kwargs["check_vma"] = kwargs.pop("check_rep")
     return _shard_map(f, **kwargs)
+
+
+_DIST_INITIALIZED = False
+
+
+def distributed_initialize(coordinator_address: Optional[str] = None,
+                           num_processes: Optional[int] = None,
+                           process_id: Optional[int] = None) -> None:
+    """Idempotent ``jax.distributed.initialize``.
+
+    ``None`` arguments are dropped so jax's environment auto-detection
+    applies; a second call (from this shim or from an external launcher
+    that beat us to it) is a no-op instead of the RuntimeError jax raises
+    on double initialization. Must run before any jax device use.
+    """
+    global _DIST_INITIALIZED
+    if _DIST_INITIALIZED:
+        return
+    import jax
+    kwargs = {"coordinator_address": coordinator_address,
+              "num_processes": num_processes, "process_id": process_id}
+    kwargs = {k: v for k, v in kwargs.items() if v is not None}
+    try:
+        jax.distributed.initialize(**kwargs)
+    except RuntimeError as e:
+        # jax: "jax.distributed.initialize should only be called once"
+        if "once" not in str(e):
+            raise
+    _DIST_INITIALIZED = True
+
+
+def process_index() -> int:
+    """This host's index in the distributed runtime (0 single-process)."""
+    import jax
+    return jax.process_index()
+
+
+def process_count() -> int:
+    """Number of processes in the distributed runtime (1 single-process)."""
+    import jax
+    return jax.process_count()

@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import shard_map
-from repro.launch.mesh import dp_spec_entry
+from repro.launch.mesh import MODEL_AXIS, dp_spec_entry
 
 from repro.configs.base import MoEConfig
 
@@ -60,11 +60,11 @@ Params = Dict[str, Any]
 
 
 def ep_applicable(m: MoEConfig, mesh, batch: int, batch_axis: int) -> bool:
-    if mesh is None or "model" not in mesh.axis_names:
+    if mesh is None or MODEL_AXIS not in mesh.axis_names:
         return False
     if m.shard_axis != "expert":
         return False
-    return m.n_experts % mesh.shape["model"] == 0
+    return m.n_experts % mesh.shape[MODEL_AXIS] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -264,14 +264,14 @@ def ep_dispatch_combine(params: Params, m: MoEConfig, x: jax.Array,
 
     def local_fn(xb, tib, twb, slb, kpb, wg, wu, wd):
         return _local_combine(xb, tib, twb, slb, kpb, wg[0], wu[0], wd[0],
-                              m=m, C=C, axis="model", mode="expert")
+                              m=m, C=C, axis=MODEL_AXIS, mode="expert")
 
     # expert weights carry a leading dummy axis so the sharded E dim stays
     # explicit: (1, E, d, f) sharded on dim1.
     wg = params["w_gate"][None]
     wu = params["w_up"][None]
     wd = params["w_down"][None]
-    w_spec = P(None, "model", None, None)
+    w_spec = P(None, MODEL_AXIS, None, None)
     fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(tok_spec, tok_spec, tok_spec, tok_spec, tok_spec,

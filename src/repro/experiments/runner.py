@@ -19,10 +19,12 @@ topology ladder to the widest compatible mesh, or single-device.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import shutil
 import time
-from typing import Any, Callable, Dict, List, Optional
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.experiments.metrics import MetricsLogger, ResultsStore
 from repro.experiments.spec import RunSpec, SweepSpec
@@ -37,6 +39,21 @@ def _lm_config(spec: RunSpec):
                                vocab_size=spec.lm_vocab_size)
 
 
+_DEGRADE_WARNED: set = set()
+
+
+def _warn_degraded(requested: str, actual: str) -> None:
+    """One warning per (requested, actual) pair per process: the ladder's
+    silent fallbacks made "my 2d sweep ran single-device" invisible."""
+    key = (requested, actual)
+    if key in _DEGRADE_WARNED:
+        return
+    _DEGRADE_WARNED.add(key)
+    warnings.warn(
+        f"mesh topology {requested!r} unavailable for this run's geometry/"
+        f"devices; degrading to {actual!r}", RuntimeWarning, stacklevel=3)
+
+
 def _mesh_for(spec: RunSpec):
     """The widest mesh this run's topology request and geometry allow.
 
@@ -47,7 +64,8 @@ def _mesh_for(spec: RunSpec):
     :func:`repro.train.parallel.mesh_compatible`) doesn't fit, or when the
     run has nothing to shard over the model axis (vision or dense-LM runs
     — a model axis would only replicate work that the wider data mesh
-    parallelizes).
+    parallelizes). Degrading emits a one-time RuntimeWarning naming the
+    requested and actual topology.
     """
     if not spec.use_mesh:
         return None
@@ -56,22 +74,26 @@ def _mesh_for(spec: RunSpec):
         raise ValueError(f"unknown mesh topology {spec.use_mesh!r}; "
                          "expected False, True, 'data', or '2d'")
     import jax
-    from repro.launch.mesh import make_2d_mesh, make_data_mesh
+    from repro.launch.mesh import MODEL_AXIS, make_2d_mesh, make_data_mesh
     from repro.train.parallel import mesh_compatible
     if len(jax.devices()) < 2:
+        _warn_degraded(topo, "single-device")
         return None
     cfg = _lm_config(spec) if spec.lm_arch else None
     sizes = (spec.batch_schedule.phases(spec.regime().total_steps)
              if spec.batch_schedule is not None else [spec.lb.batch_size])
-    ladder = [make_data_mesh()]
+    ladder = [("data", make_data_mesh())]
     if topo == "2d" and cfg is not None and cfg.moe is not None:
         mesh2d = make_2d_mesh()
-        if "model" in mesh2d.axis_names and mesh2d.shape["model"] > 1:
-            ladder.insert(0, mesh2d)
-    for mesh in ladder:
+        if MODEL_AXIS in mesh2d.axis_names and mesh2d.shape[MODEL_AXIS] > 1:
+            ladder.insert(0, ("2d", mesh2d))
+    for name, mesh in ladder:
         if all(mesh_compatible(spec.lb, mesh, batch_size=b, cfg=cfg)
                for b in sizes):
+            if name != topo:
+                _warn_degraded(topo, name)
             return mesh
+    _warn_degraded(topo, "single-device")
     return None
 
 
@@ -154,11 +176,21 @@ def _run_lm(spec: RunSpec, regime, *, checkpoint_dir, checkpoint_every,
         obs=obs)
 
 
+def _shard_owns(run_id: str, index: int, count: int) -> bool:
+    """Stable run -> host assignment: hash the content-addressed run_id, not
+    the expansion order, so adding/removing runs from a sweep never
+    reshuffles the survivors across hosts."""
+    h = int(hashlib.sha1(run_id.encode()).hexdigest()[:8], 16)
+    return h % count == index
+
+
 def run_sweep(sweep: SweepSpec, out_dir: str, *, resume: bool = True,
               checkpoint_every: int = 0,
               keep_checkpoints: bool = False,
               log_fn: Optional[Callable[[str], None]] = None,
-              obs=None) -> List[Dict[str, Any]]:
+              obs=None,
+              shard: Optional[Tuple[int, int]] = None
+              ) -> List[Dict[str, Any]]:
     """Run (or resume) every run of ``sweep``; returns all its records.
 
     ``out_dir/<sweep.name>/records.jsonl`` accumulates one record per
@@ -166,12 +198,30 @@ def run_sweep(sweep: SweepSpec, out_dir: str, *, resume: bool = True,
     in-flight run state (deleted on run completion unless
     ``keep_checkpoints``). With ``resume=False`` the store is cleared and
     every run re-executes.
+
+    ``shard=(index, count)`` runs only the runs whose ``run_id`` hashes to
+    ``index`` — one runner per host under a multi-process launch, all
+    appending to the same shared ``out_dir`` store. ``shard=None``
+    auto-detects from the jax distributed runtime when it spans more than
+    one process; the returned records cover THIS shard only (the JSONL
+    store accumulates the union).
     """
+    if shard is None:
+        import jax
+        if jax.process_count() > 1:
+            shard = (jax.process_index(), jax.process_count())
     root = os.path.join(out_dir, sweep.name)
     store = ResultsStore(root)
     if not resume and os.path.exists(root):
         shutil.rmtree(root)
     specs = sweep.expand()
+    if shard is not None:
+        index, count = shard
+        if not (0 <= index < count):
+            raise ValueError(f"bad sweep shard {shard}")
+        specs = [s for s in specs if _shard_owns(s.run_id, index, count)]
+        if log_fn:
+            log_fn(f"sweep shard {index}/{count}: {len(specs)} run(s)")
     done = store.completed_run_ids() if resume else set()
     for i, spec in enumerate(specs):
         tag = f"[{i + 1}/{len(specs)}] {spec.method} b={spec.batch_size} " \

@@ -1,27 +1,64 @@
-"""Production mesh construction.
+"""Production mesh construction (single-host and multi-process).
 
 Defined as FUNCTIONS (not module-level constants) so importing this module
 never touches jax device state — the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import, and smoke tests must keep seeing the single real device.
+
+The mesh axis NAMES live here as the module constants ``POD_AXIS`` /
+``DATA_AXIS`` / ``MODEL_AXIS``. Collective call sites (``psum`` / ``pmean``
+/ ``all_gather`` / ...) must reference these constants rather than spelling
+the strings inline — enforced by lint rule ``axis-name-literal`` — so a
+mesh-layout rename is one edit, not a repo-wide grep.
+
+Multi-process: :func:`init_distributed` (routed through
+:mod:`repro.core.compat`) brings up the ``jax.distributed`` runtime, after
+which :func:`make_pod_mesh` lays the ``pod`` axis over processes.
+:func:`make_local_mesh` builds the per-process compute mesh for backends
+(CPU) whose collectives cannot cross processes.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
+
+# The canonical mesh axis names. Every psum/pmean/all_gather axis argument
+# in src/ traces back to these (lint rule axis-name-literal).
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+def init_distributed(coordinator_address: Optional[str] = None,
+                     num_processes: Optional[int] = None,
+                     process_id: Optional[int] = None) -> None:
+    """Bring up the multi-process jax runtime (idempotent).
+
+    Thin wrapper over :func:`repro.core.compat.distributed_initialize` — the
+    version shim owns the actual ``jax.distributed.initialize`` call. With
+    no arguments jax auto-detects the cluster environment (SLURM etc.); an
+    explicit (coordinator, n, id) triple is what the tests and ad-hoc
+    launches pass. Call BEFORE any jax device use, then build the
+    process-spanning mesh with :func:`make_pod_mesh`.
+    """
+    from repro.core.compat import distributed_initialize
+    distributed_initialize(coordinator_address=coordinator_address,
+                           num_processes=num_processes,
+                           process_id=process_id)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axes = ((POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod
+            else (DATA_AXIS, MODEL_AXIS))
     return jax.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh on the real local device (CPU smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+    return jax.make_mesh((1, 1), (DATA_AXIS, MODEL_AXIS))
 
 
 def make_data_mesh(n_devices: int = 0):
@@ -29,7 +66,7 @@ def make_data_mesh(n_devices: int = 0):
     devices — one mesh slot per GBN device shard; used by the shard_map
     data-parallel trainer (:mod:`repro.train.data_parallel`)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), ("data",))
+    return jax.make_mesh((n,), (DATA_AXIS,))
 
 
 def make_2d_mesh(n_devices: int = 0, model: int = 0):
@@ -45,12 +82,67 @@ def make_2d_mesh(n_devices: int = 0, model: int = 0):
     m = model or (2 if n > 1 and n % 2 == 0 else 1)
     if n % m:
         raise ValueError(f"{n} devices do not factor into model={m}")
-    return jax.make_mesh((n // m, m), ("data", "model"))
+    return jax.make_mesh((n // m, m), (DATA_AXIS, MODEL_AXIS))
+
+
+def make_pod_mesh(model: int = 1):
+    """3-D ("pod", "data", "model") mesh spanning ALL processes: one pod
+    slot per process, ``data`` over each process's remaining devices.
+
+    Requires :func:`init_distributed` first. ``jax.make_mesh`` enumerates
+    devices process-major, so each pod row is exactly one process's local
+    devices — the pod axis IS the process axis. Cross-pod collectives need
+    a backend with inter-process transport (TPU/GPU); the CPU backend can
+    build this mesh, create/checkpoint global arrays on it, but not run a
+    computation across it (XLA: "Multiprocess computations aren't
+    implemented on the CPU backend") — use :func:`make_local_mesh` for the
+    per-host compute there.
+    """
+    nproc = jax.process_count()
+    n = len(jax.devices())
+    local = n // nproc
+    if model <= 0 or local % model:
+        raise ValueError(
+            f"{local} per-process devices do not factor into model={model}")
+    return jax.make_mesh((nproc, local // model, model),
+                         (POD_AXIS, DATA_AXIS, MODEL_AXIS))
+
+
+def make_local_mesh(model: int = 1):
+    """2-D ("data", "model") mesh over THIS process's addressable devices.
+
+    The per-host compute mesh under a multi-process runtime whose backend
+    lacks cross-process collectives (CPU): each host trains/serves its own
+    shard of the work (see ``run_sweep(shard=...)``) on its local devices
+    while the process-spanning :func:`make_pod_mesh` handles global array
+    placement and per-shard checkpointing.
+    """
+    import numpy as np
+    devs = np.asarray(jax.local_devices())
+    n = len(devs)
+    if model <= 0 or n % model:
+        raise ValueError(
+            f"{n} local devices do not factor into model={model}")
+    return jax.sharding.Mesh(devs.reshape(n // model, model),
+                             (DATA_AXIS, MODEL_AXIS))
+
+
+def global_array(mesh, arr, spec):
+    """A global jax.Array on ``mesh`` from a host-identical numpy array.
+
+    Under a multi-process runtime a plain ``jnp.asarray`` is process-local
+    and cannot feed a computation over a process-spanning mesh; this places
+    each shard from the (identical on every host) ``arr`` — the standard
+    way to feed replicated-input batches onto a pod mesh.
+    """
+    from jax.sharding import NamedSharding
+    return jax.make_array_from_callback(
+        arr.shape, NamedSharding(mesh, spec), lambda idx: arr[idx])
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:
     """The axes the global batch is sharded over (only those present)."""
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in (POD_AXIS, DATA_AXIS) if a in mesh.axis_names)
 
 
 def dp_size(mesh) -> int:
@@ -72,7 +164,8 @@ def dp_spec_entry(mesh):
 
 def fsdp_axes(mesh) -> Tuple[str, ...]:
     """The axes parameters are fully-sharded over (in addition to 'model')."""
-    return (("data", "pod") if "pod" in mesh.axis_names else ("data",))
+    return ((DATA_AXIS, POD_AXIS) if POD_AXIS in mesh.axis_names
+            else (DATA_AXIS,))
 
 
 def axis_size(mesh, name: str) -> int:

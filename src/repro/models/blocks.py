@@ -16,12 +16,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.core import expert_parallel as EP
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
 from repro.sharding.hints import current_mesh, hint
 
 Params = Dict[str, Any]
+
+
+def _tp_axis(local_dim: int, full_dim: int) -> Optional[str]:
+    """Megatron-in-region detection: inside a manual shard_map region
+    (:func:`EP.manual_mode`) a block may receive the LOCAL tensor-parallel
+    slice of its weights. Sliced-ness is inferred from the actual leaf shape
+    vs the config's full width — the same always-agrees-with-the-spec-builder
+    trick as :func:`EP.manual_shard_mode` — and the model axis name is
+    returned so the caller can fence the sublayer with the region_in /
+    region_out adjoint pair."""
+    st = EP.manual_state()
+    if st is None or st[0] is None:
+        return None
+    return st[0] if local_dim != full_dim else None
 
 
 def _sp_hint(x: jax.Array, enabled: bool) -> jax.Array:
@@ -148,9 +163,26 @@ def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
                                              use_kernels=use_kernels)
             new_cache["attn"] = kvc
         else:
-            y_mix = L.attention_full(params["mixer"], cfg, h, positions,
+            ax = _tp_axis(params["mixer"]["wq"].shape[-1],
+                          cfg.n_heads * cfg.head_dim)
+            if ax is not None:
+                # Megatron attention: head-split qkv (column-parallel) +
+                # head-split wo (row-parallel). The whole sublayer is one
+                # partial-sum region: identity-fwd/psum-bwd on everything
+                # replicated entering it (the stream AND the per-head-dim
+                # qk_norm scales), psum-fwd/identity-bwd on the way out.
+                mp = dict(params["mixer"])
+                for nk in ("q_norm", "k_norm"):
+                    if nk in mp:
+                        mp[nk] = {"scale": EP.region_in(mp[nk]["scale"], ax)}
+                y_mix = EP.region_out(
+                    L.attention_full(mp, cfg, EP.region_in(h, ax), positions,
                                      window=window, causal=causal,
-                                     use_kernels=use_kernels)
+                                     use_kernels=use_kernels), ax)
+            else:
+                y_mix = L.attention_full(params["mixer"], cfg, h, positions,
+                                         window=window, causal=causal,
+                                         use_kernels=use_kernels)
     elif spec.mixer == "ssm":
         h = L.norm_apply(cfg, params["norm1"], x)
         if decode:
@@ -178,7 +210,14 @@ def block_apply(params: Params, cfg: ModelConfig, spec: LayerSpec,
                                          use_kernels=use_kernels)
         else:
             h = L.norm_apply(cfg, params["norm2"], x)
-        x = x + L.mlp_apply(params["ff"], h, use_kernels=use_kernels)
+        ax = _tp_axis(params["ff"]["w_gate"].shape[-1], cfg.d_ff)
+        if ax is not None:
+            # Megatron MLP: column-parallel w_gate/w_up, row-parallel w_down.
+            x = x + EP.region_out(
+                L.mlp_apply(params["ff"], EP.region_in(h, ax),
+                            use_kernels=use_kernels), ax)
+        else:
+            x = x + L.mlp_apply(params["ff"], h, use_kernels=use_kernels)
     elif spec.ff == "moe":
         if y_mix is not None:
             x = x + y_mix

@@ -141,8 +141,13 @@ def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
                  positions: Optional[jax.Array], rope: bool = True):
     B = x.shape[0]
     T = x.shape[1]
-    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hd = cfg.head_dim
     dt = x.dtype
+    # head counts come from the WEIGHT shapes, not cfg: under Megatron-style
+    # tensor parallelism the shard_map region hands this function the local
+    # head-slice (h/msize heads), and every downstream op is per-head.
+    h = params["wq"].shape[-1] // hd
+    kv = params["wk"].shape[-1] // hd
     q = (x @ params["wq"].astype(dt)).reshape(B, T, h, hd)
     k = (x @ params["wk"].astype(dt)).reshape(B, T, kv, hd)
     v = (x @ params["wv"].astype(dt)).reshape(B, T, kv, hd)

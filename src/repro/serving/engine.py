@@ -389,12 +389,20 @@ class ContinuousEngine:
                  cache_dtype: Optional[str] = None,
                  use_kernels: bool = False, eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0,
-                 rng: Optional[jax.Array] = None, obs=None):
+                 rng: Optional[jax.Array] = None, obs=None, mesh=None):
         if any(s.cross_attn for s in (tuple(cfg.head_pattern)
                                       + tuple(cfg.body_pattern)
                                       + tuple(cfg.tail_pattern))):
             raise ValueError("ContinuousEngine serves decoder-only models "
                              "(no cross-attention memory)")
+        self.mesh = mesh
+        if mesh is not None:
+            # model-sharded serving: params per the pjit rules (Megatron
+            # attention/MLP over "model"), and below the paged pool over
+            # kv-heads per rules.cache_specs — GSPMD inserts the collectives.
+            from repro.sharding import rules
+            params = jax.device_put(params, rules.param_shardings(params,
+                                                                  mesh))
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -443,6 +451,11 @@ class ContinuousEngine:
             page_size=self.page_size or 64,
             total_pages=self.total_pages or None,
             cache_dtype=self.cache_dtype)
+        if self.mesh is not None:
+            from repro.sharding import rules
+            self.cache = jax.device_put(
+                self.cache, rules.to_shardings(
+                    rules.cache_specs(self.cache, self.mesh, n), self.mesh))
         self.pos = np.zeros((n,), np.int32)
         self.active = np.zeros((n,), bool)
         self._last = jnp.zeros((n, 1), jnp.int32)

@@ -1,4 +1,4 @@
-"""Unified 2-D parallelism: one shard_map layer composing data x model.
+"""Unified 3-D parallelism: one shard_map layer composing pod x data x model.
 
 The repo grew three disjoint parallelism islands — the 1-D ``("data",)``
 shard_map vision trainer (:mod:`repro.train.data_parallel`), the
@@ -14,27 +14,37 @@ collapses them into one production path over any mesh from
   same :func:`repro.sharding.rules.param_specs` rules the pjit launcher
   lowers with (restricted to the axes manual SPMD can honor, see
   :func:`mesh_param_specs`);
-- everything else (non-expert params, optimizer state, BN state) is
-  replicated, and the per-step collectives are: the gradient ``pmean`` over
-  the dp axes ONLY, one combine ``psum`` over ``"model"`` per MoE layer
-  (:func:`repro.core.expert_parallel.ep_manual_combine` composes inside the
-  same shard_map region), a scalar psum for the corrected grad-clip norm,
-  and the small metric/EMA averages.
+- ``tp=True`` additionally Megatron-shards the attention (head-split
+  qkv/o: column-parallel in, row-parallel out) and dense-MLP weights over
+  ``"model"`` — the model code detects the local slice by shape and fences
+  each sublayer with the expert_parallel adjoint pair (see
+  :func:`repro.models.blocks._tp_axis`), so the only extra collective is
+  one output psum per fenced sublayer, exactly Megatron's count;
+- ``fsdp=True`` shards every remaining large parameter — and with it the
+  optimizer moments — over the dp axes: the step all-gathers each such
+  leaf on entry to the loss (autodiff transposes the gather into the
+  reduce-scatter, so gradients come back dp-sharded), and the optimizer
+  update runs shard-local (both optimizers here are elementwise per leaf),
+  cutting per-device param+state memory by ~dp_size;
+- everything else stays replicated, gradients of replicated leaves are
+  ``pmean`` ed over the dp axes, and grad-clip's global norm is assembled
+  from per-group psums (:func:`_sharded_global_norm`).
 
 Ghost statistics (the paper's central device-local quantity) never cross
 the wire: each dp shard normalizes — and draws ghost gradient noise — from
 its own slice, exactly as in the 1-D trainer.
 
-Gradient exactness: the expert-partial region is fenced with the adjoint
+Gradient exactness: every partial-sum region is fenced with the adjoint
 pair ``region_in``/``region_out`` (see expert_parallel.py), so the sharded
 step's loss, gradients, and parameter trajectory MATCH the single-device
 step (tests/test_parallel_2d.py asserts multi-step equality for dense,
-expert-sharded, and ffn-sharded configs).
+expert-sharded, ffn-sharded, Megatron-TP, and FSDP configs).
 """
 from __future__ import annotations
 
 import re
-from typing import Any, Callable, Dict, Optional
+from types import SimpleNamespace
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,13 +57,15 @@ from repro.core.compat import shard_map
 from repro.core.large_batch import LargeBatchConfig
 from repro.core.regime import Regime
 from repro.launch import mesh as mesh_lib
+from repro.launch.mesh import MODEL_AXIS
 from repro.models import transformer as T
-from repro.optim import sgd
+from repro.optim import adam, sgd
 from repro.sharding import rules
 
 Params = Any
 
 _EXPERT_RE = re.compile(r"/ff/w_(gate|up|down)$")
+_TP_ATTN_RE = re.compile(r"/mixer/w[qkvo]$")
 
 
 # ---------------------------------------------------------------------------
@@ -61,34 +73,96 @@ _EXPERT_RE = re.compile(r"/ff/w_(gate|up|down)$")
 # ---------------------------------------------------------------------------
 
 
-def mesh_param_specs(params_or_shapes: Params, mesh) -> Params:
+def _spec_axes(spec) -> Tuple[str, ...]:
+    """All mesh axis names a spec shards over (tuples flattened)."""
+    axes = []
+    for e in spec:
+        if e is None:
+            continue
+        axes.extend(e if isinstance(e, tuple) else (e,))
+    return tuple(axes)
+
+
+def _fsdp_entry(spec) -> Optional[Tuple[int, Tuple[str, ...]]]:
+    """(dim, dp-axes) of a spec's FSDP entry — the first entry naming
+    non-model axes — or None for TP-only / replicated leaves."""
+    for i, e in enumerate(spec):
+        if e is None or e == MODEL_AXIS:
+            continue
+        return i, (e if isinstance(e, tuple) else (e,))
+    return None
+
+
+def _tree_with_specs(fn, tree: Params, specs: Params) -> Params:
+    """tree_map over (leaf, spec) pairs. PartitionSpec subclasses tuple, so
+    a plain jax.tree.map would flatten INTO the specs — flatten_up_to keeps
+    them opaque."""
+    flat, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(specs)
+    return treedef.unflatten([fn(l, s) for l, s in zip(flat, flat_s)])
+
+
+def mesh_param_specs(params_or_shapes: Params, mesh, *,
+                     cfg: Optional[ModelConfig] = None,
+                     tp: bool = False, fsdp: bool = False) -> Params:
     """shard_map in/out specs for the parameter pytree: the
     :func:`repro.sharding.rules.param_specs` rules restricted to what a
     manual (shard_map) region can honor.
 
-    Only the MoE expert tensors keep their ``"model"`` entry — their local
-    math + combine psum live in expert_parallel.py. Attention/MLP/mamba
-    weights, which the pjit path Megatron-shards via GSPMD propagation, are
-    replicated here (manual tensor parallelism for them would need psums the
-    model code doesn't carry), and the FSDP/data axes are dropped — the
-    unified layer is pure DP outside the experts.
+    Default (``tp=fsdp=False``): only the MoE expert tensors keep their
+    ``"model"`` entry — their local math + combine psum live in
+    expert_parallel.py — and everything else replicates.
+
+    ``tp=True`` (requires ``cfg``) also keeps ``"model"`` on the Megatron
+    targets the fenced model code handles: rank-2 attention projections
+    (``/mixer/w[qkvo]``, gated on BOTH head counts dividing the model size
+    so q and kv slices stay aligned) and rank-2 dense-MLP weights
+    (``/ff/w_(gate|up|down)``, gated on ``d_ff`` dividing). Embedding /
+    lm-head stay replicated — vocab-parallel would need a fenced
+    cross-entropy the model code doesn't carry.
+
+    ``fsdp=True`` keeps the rules' dp-axes entries wherever they landed
+    (large rank-2+ tensors whose dim divides), marking those leaves for the
+    train step's gather-on-entry / reduce-scatter-on-grad path. Works on
+    meshes without a ``"model"`` axis too (pure-dp FSDP).
     """
-    if "model" not in mesh.axis_names:
+    if tp and cfg is None:
+        raise ValueError("tp=True needs cfg to gate the head/ff splits")
+    has_model = MODEL_AXIS in mesh.axis_names
+    if not has_model and not fsdp:
         # pure-dp mesh (e.g. the 1-D ("data",) mesh): everything replicates;
         # the pjit rules would KeyError on their "model" lookups.
         return jax.tree.map(lambda l: P(*([None] * len(l.shape))),
                             params_or_shapes)
-    full = rules.param_specs(params_or_shapes, mesh)
+    rules_mesh = mesh
+    if not has_model:
+        # give the rules a model=1 view of the mesh; every "model" entry
+        # they produce is dropped below.
+        rules_mesh = SimpleNamespace(
+            axis_names=tuple(mesh.axis_names) + (MODEL_AXIS,),
+            shape={**dict(mesh.shape), MODEL_AXIS: 1})
+    full = rules.param_specs(params_or_shapes, rules_mesh)
+    msize = mesh_lib.axis_size(mesh, MODEL_AXIS)
 
     def one(path, leaf, spec):
         p = rules.path_str(path)
         stacked = "stack/body" in p or re.search(r"(^|/)body/", p)
+        rank = len(leaf.shape) - (1 if stacked else 0)
         # expert tensors are (E, d, f) — rank 3 plus the scanned body dim.
-        # The dense-MLP weights share the w_gate/w_up/w_down names at rank
-        # 2: GSPMD Megatron-shards those, manual SPMD must replicate them.
-        keep = (bool(_EXPERT_RE.search(p))
-                and len(leaf.shape) - (1 if stacked else 0) == 3)
-        return P(*[e if (keep and e == "model") else None for e in spec])
+        keep_model = bool(_EXPERT_RE.search(p)) and rank == 3
+        if tp and has_model and msize > 1 and rank == 2:
+            if _TP_ATTN_RE.search(p):
+                keep_model = (cfg.n_heads % msize == 0
+                              and cfg.n_kv_heads % msize == 0)
+            elif _EXPERT_RE.search(p):
+                keep_model = cfg.d_ff % msize == 0
+        def ent(e):
+            if e is None:
+                return None
+            if e == MODEL_AXIS or (isinstance(e, tuple) and MODEL_AXIS in e):
+                return e if (keep_model and has_model) else None
+            return e if fsdp else None
+        return P(*[ent(e) for e in spec])
 
     return jax.tree_util.tree_map_with_path(one, params_or_shapes, full)
 
@@ -114,7 +188,7 @@ def mesh_compatible(lb: LargeBatchConfig, mesh, *, batch_size: int = 0,
     local = b // nd
     if lb.use_gbn and local % lb.ghost_batch_size:
         return False
-    msize = mesh_lib.axis_size(mesh, "model")
+    msize = mesh_lib.axis_size(mesh, MODEL_AXIS)
     if msize > 1 and cfg is not None and getattr(cfg, "moe", None) is not None:
         m = cfg.moe
         if m.n_experts % msize and m.d_expert % msize:
@@ -127,24 +201,22 @@ def mesh_compatible(lb: LargeBatchConfig, mesh, *, batch_size: int = 0,
 # ---------------------------------------------------------------------------
 
 
-def _sharded_global_norm(grads: Params, pspecs: Params,
-                         model_axis: Optional[str]) -> jax.Array:
-    """Global grad norm inside the region: leaves sharded over the model
-    axis contribute their local sum-of-squares through one scalar psum;
-    replicated leaves (identical on every model shard) are counted once."""
+def _sharded_global_norm(grads: Params, pspecs: Params) -> jax.Array:
+    """Global grad norm inside the region: leaves sharded over some set of
+    mesh axes (model for TP/experts, dp axes for FSDP, both for TP+FSDP)
+    contribute their local sum-of-squares through one scalar psum per
+    distinct axis-set; replicated leaves are counted once."""
     flat_g, treedef = jax.tree.flatten(grads)
     flat_s = treedef.flatten_up_to(pspecs)
-    sq_rep = jnp.zeros((), jnp.float32)
-    sq_sh = jnp.zeros((), jnp.float32)
+    groups: Dict[Tuple[str, ...], jax.Array] = {}
     for g, s in zip(flat_g, flat_s):
+        axes = tuple(sorted(_spec_axes(s)))
         ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
-        if model_axis is not None and any(e == "model" for e in s):
-            sq_sh = sq_sh + ss
-        else:
-            sq_rep = sq_rep + ss
-    if model_axis is not None:
-        sq_sh = jax.lax.psum(sq_sh, model_axis)
-    return jnp.sqrt(sq_rep + sq_sh)
+        groups[axes] = groups.get(axes, jnp.zeros((), jnp.float32)) + ss
+    total = jnp.zeros((), jnp.float32)
+    for axes, ss in groups.items():
+        total = total + (jax.lax.psum(ss, axes) if axes else ss)
+    return jnp.sqrt(total)
 
 
 def make_mesh_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
@@ -154,60 +226,106 @@ def make_mesh_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
                             momentum_dtype: str = "float32",
                             remat: bool = False,
                             seq_parallel: bool = False,
-                            ce_chunk: int = 0) -> Callable:
-    """The LM train step sharded data x model over ``mesh``.
+                            ce_chunk: int = 0,
+                            tp: bool = False,
+                            fsdp: bool = False,
+                            optimizer: str = "sgd") -> Callable:
+    """The LM train step sharded pod? x data x model over ``mesh``.
 
     Same signature as :func:`repro.train.trainer.make_lm_train_step`'s
     result — (params, opt_state, batch, step, rng) -> (params, opt_state,
-    metrics) — with the batch sharded over the dp axes, expert weights over
-    ``"model"``, and everything else replicated. ``params`` provides the
-    pytree/shapes the in/out specs are derived from. Differentiates through
-    the Pallas kernels (``use_kernels=True``) exactly like the unsharded
-    step; gradients are ``pmean`` ed over the dp axes only.
+    metrics) — with the batch sharded over the dp axes and the parameters
+    laid out per :func:`mesh_param_specs` (``tp``: Megatron attention/MLP
+    over "model"; ``fsdp``: large leaves + optimizer moments over the dp
+    axes; both compose). ``params`` provides the pytree/shapes the in/out
+    specs are derived from; the CALLER device_puts params/opt_state with
+    ``rules.to_shardings(mesh, pspecs)`` when they are sharded.
 
-    Note: with ``lb.ghost_noise > 0`` each model shard draws its noise for
-    its local expert slice, so the realization differs from the unsharded
-    step (the distribution does not); run equivalence tests noise-free.
+    FSDP leaves are all-gathered on entry to the loss; autodiff transposes
+    the (tiled) all-gather into a reduce-scatter, so their gradients come
+    back dp-sharded as SUMS over the gather axes — rescaled to means here.
+    The optimizer (``"sgd"`` | ``"adam"``) then updates shard-local: both
+    are elementwise per leaf, so each dp shard's update IS the slice of the
+    full update. Replicated leaves keep the plain gradient ``pmean``.
+
+    Note: with ``lb.ghost_noise > 0`` each shard draws noise for its local
+    slice, so the realization differs from the unsharded step (the
+    distribution does not); run equivalence tests noise-free.
     """
     if momentum_dtype == "int8":
         raise NotImplementedError(
             "int8 momentum blocks the trailing dim; its quantized buffers "
             "need their own specs — use the pjit path or float32 momentum")
+    if optimizer not in ("sgd", "adam"):
+        raise ValueError(f"unknown optimizer {optimizer!r}")
     sigma = lb.effective_noise_sigma()
+    if optimizer == "adam" and sigma:
+        raise NotImplementedError("ghost noise is wired into sgd.update only")
     dp = mesh_lib.dp_axes(mesh)
     dp_arg = mesh_lib.dp_spec_entry(mesh)
-    model_ax = "model" if "model" in mesh.axis_names else None
-    msize = mesh_lib.axis_size(mesh, "model")
-    pspecs = mesh_param_specs(params, mesh)
+    model_ax = MODEL_AXIS if MODEL_AXIS in mesh.axis_names else None
+    msize = mesh_lib.axis_size(mesh, MODEL_AXIS)
+    pspecs = mesh_param_specs(params, mesh, cfg=cfg, tp=tp, fsdp=fsdp)
     rep = P()
-    opt_specs = sgd.SGDState(momentum=pspecs, step=rep)
+    if optimizer == "adam":
+        opt_specs = adam.AdamState(mu=pspecs, nu=pspecs, step=rep)
+    else:
+        opt_specs = sgd.SGDState(momentum=pspecs, step=rep)
+    dp_sizes = {a: mesh.shape[a] for a in dp}
 
-    def local_step(params: Params, opt_state: sgd.SGDState,
-                   batch: Dict[str, jax.Array], step: jax.Array,
-                   rng: jax.Array):
+    def gather_leaf(leaf, spec):
+        ent = _fsdp_entry(spec)
+        if ent is None:
+            return leaf
+        dim, axes = ent
+        return jax.lax.all_gather(leaf, axes, axis=dim, tiled=True)
+
+    def finalize_grad(g, spec):
+        # FSDP leaves arrive as reduce-scattered SUMS over their gather
+        # axes; everything else still needs averaging over the dp axes.
+        ent = _fsdp_entry(spec)
+        scattered = ent[1] if ent is not None else ()
+        rest = tuple(a for a in dp if a not in scattered)
+        if scattered:
+            n = 1
+            for a in scattered:
+                n *= dp_sizes.get(a, 1)
+            g = g / float(n)
+        if rest:
+            g = jax.lax.pmean(g, rest)
+        return g
+
+    def local_step(params: Params, opt_state, batch: Dict[str, jax.Array],
+                   step: jax.Array, rng: jax.Array):
         def loss_fn(p):
+            pg = _tree_with_specs(gather_leaf, p, pspecs) if fsdp else p
             with EP.manual_mode(model_ax, msize, dp):
-                return T.lm_loss(p, cfg, batch, use_kernels=use_kernels,
+                return T.lm_loss(pg, cfg, batch, use_kernels=use_kernels,
                                  remat=remat, seq_parallel=seq_parallel,
                                  ce_chunk=ce_chunk)
 
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
         if dp:
-            grads = jax.lax.pmean(grads, dp)
+            grads = _tree_with_specs(finalize_grad, grads, pspecs)
             loss = jax.lax.pmean(loss, dp)
             metrics = jax.lax.pmean(metrics, dp)
         clip_metrics: Dict[str, jax.Array] = {}
         if lb.grad_clip and lb.grad_clip > 0:
-            norm = _sharded_global_norm(grads, pspecs, model_ax)
+            norm = _sharded_global_norm(grads, pspecs)
             grads, gnorm = clip_by_global_norm(grads, lb.grad_clip, norm=norm)
             clip_metrics["grad_norm"] = gnorm
         lr = regime.lr_at(step)
-        params2, opt_state2, opt_metrics = sgd.update(
-            grads, opt_state, params,
-            lr=lr, momentum=lb.momentum, nesterov=lb.nesterov,
-            weight_decay=weight_decay, grad_clip=0.0,
-            noise_sigma=sigma, rng=rng, momentum_dtype=momentum_dtype)
+        if optimizer == "adam":
+            params2, opt_state2, opt_metrics = adam.update(
+                grads, opt_state, params,
+                lr=lr, weight_decay=weight_decay, grad_clip=0.0)
+        else:
+            params2, opt_state2, opt_metrics = sgd.update(
+                grads, opt_state, params,
+                lr=lr, momentum=lb.momentum, nesterov=lb.nesterov,
+                weight_decay=weight_decay, grad_clip=0.0,
+                noise_sigma=sigma, rng=rng, momentum_dtype=momentum_dtype)
         metrics = {"loss": loss, "lr": lr, **metrics, **opt_metrics,
                    **clip_metrics}
         return params2, opt_state2, metrics
@@ -216,6 +334,27 @@ def make_mesh_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
                      in_specs=(pspecs, opt_specs, P(dp_arg), rep, rep),
                      out_specs=(pspecs, opt_specs, rep),
                      check_vma=False)
+
+
+def state_bytes_per_device(tree: Params, specs: Params, mesh) -> int:
+    """Per-device bytes of a (params or optimizer-state) pytree laid out by
+    ``specs`` on ``mesh`` — the number the FSDP memory assertion checks
+    (Adam state shrinks ~dp_size when its leaves carry dp entries)."""
+    flat, treedef = jax.tree.flatten(tree)
+    flat_s = treedef.flatten_up_to(specs)
+    total = 0
+    for leaf, spec in zip(flat, flat_s):
+        n = 1
+        for a in _spec_axes(spec):
+            n *= mesh.shape[a]
+        nbytes = getattr(leaf, "nbytes", None)
+        if nbytes is None:        # ShapeDtypeStruct from a dryrun eval_shape
+            sz = 1
+            for d in leaf.shape:
+                sz *= d
+            nbytes = sz * jnp.dtype(leaf.dtype).itemsize
+        total += int(nbytes // n)
+    return total
 
 
 # ---------------------------------------------------------------------------

@@ -25,7 +25,7 @@ from repro.core.metrics import MetricsLogger
 from repro.core.regime import Regime
 from repro.models import transformer as T
 from repro.obs.trace import NULL_TRACER
-from repro.optim import sgd
+from repro.optim import adam, sgd
 
 Params = Any
 
@@ -60,8 +60,9 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
                        remat: bool = False,
                        seq_parallel: bool = False,
                        ce_chunk: int = 0,
-                       mesh=None, params: Optional[Params] = None
-                       ) -> Callable:
+                       mesh=None, params: Optional[Params] = None,
+                       tp: bool = False, fsdp: bool = False,
+                       optimizer: str = "sgd") -> Callable:
     """Build the jit-able LM train step implementing the paper's recipe.
 
     ``use_kernels=True`` routes both LM mixers through the Pallas kernels —
@@ -72,11 +73,14 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
     oracle forward.
 
     With ``mesh`` (any mesh from :mod:`repro.launch.mesh`) the step runs
-    sharded data x model through the unified parallelism layer
+    sharded pod? x data x model through the unified parallelism layer
     (:mod:`repro.train.parallel`): batch over the dp axes, MoE expert
-    weights over ``"model"``, gradients pmean'd over the dp axes only.
+    weights over ``"model"``, plus ``tp=True`` (Megatron attention/MLP
+    over "model") and ``fsdp=True`` (params + optimizer moments over the dp
+    axes) — see :func:`repro.train.parallel.make_mesh_lm_train_step`.
     ``params`` (the parameter pytree or its shapes) is required then — the
-    shard_map specs are derived from it.
+    shard_map specs are derived from it. ``optimizer`` picks "sgd"
+    (the paper's recipe) or "adam" (its adaptive baseline) on either path.
     """
     if mesh is not None:
         if params is None:
@@ -86,12 +90,16 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
         return make_mesh_lm_train_step(
             cfg, lb, regime, mesh, params, weight_decay=weight_decay,
             use_kernels=use_kernels, momentum_dtype=momentum_dtype,
-            remat=remat, seq_parallel=seq_parallel, ce_chunk=ce_chunk)
+            remat=remat, seq_parallel=seq_parallel, ce_chunk=ce_chunk,
+            tp=tp, fsdp=fsdp, optimizer=optimizer)
+    if tp or fsdp:
+        raise ValueError("tp/fsdp need a mesh")
+    if optimizer not in ("sgd", "adam"):
+        raise ValueError(f"unknown optimizer {optimizer!r}")
     sigma = lb.effective_noise_sigma()
 
-    def train_step(params: Params, opt_state: sgd.SGDState,
-                   batch: Dict[str, jax.Array], step: jax.Array,
-                   rng: jax.Array):
+    def train_step(params: Params, opt_state, batch: Dict[str, jax.Array],
+                   step: jax.Array, rng: jax.Array):
         def loss_fn(p):
             return T.lm_loss(p, cfg, batch, use_kernels=use_kernels,
                              remat=remat, seq_parallel=seq_parallel,
@@ -100,11 +108,16 @@ def make_lm_train_step(cfg: ModelConfig, lb: LargeBatchConfig,
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
         lr = regime.lr_at(step)
-        params2, opt_state2, opt_metrics = sgd.update(
-            grads, opt_state, params,
-            lr=lr, momentum=lb.momentum, nesterov=lb.nesterov,
-            weight_decay=weight_decay, grad_clip=lb.grad_clip,
-            noise_sigma=sigma, rng=rng, momentum_dtype=momentum_dtype)
+        if optimizer == "adam":
+            params2, opt_state2, opt_metrics = adam.update(
+                grads, opt_state, params, lr=lr,
+                weight_decay=weight_decay, grad_clip=lb.grad_clip)
+        else:
+            params2, opt_state2, opt_metrics = sgd.update(
+                grads, opt_state, params,
+                lr=lr, momentum=lb.momentum, nesterov=lb.nesterov,
+                weight_decay=weight_decay, grad_clip=lb.grad_clip,
+                noise_sigma=sigma, rng=rng, momentum_dtype=momentum_dtype)
         metrics = {"loss": loss, "lr": lr, **metrics, **opt_metrics}
         return params2, opt_state2, metrics
 
@@ -221,8 +234,10 @@ def _save_run_state(checkpoint_dir: str, step: int, params, bn_state,
     if tracker is not None:
         extra["tracker"] = {"steps": list(tracker.steps),
                             "distances": list(tracker.distances)}
+    # under a multi-process runtime each host writes only its addressable
+    # shards (no gather); single-process keeps the consolidated layout
     ckpt.save(checkpoint_dir, step, params, opt_state, extra=extra,
-              bn_state=bn_state)
+              bn_state=bn_state, sharded=jax.process_count() > 1)
 
 
 def _restore_run_state(checkpoint_dir, params, opt_state, bn_state, tracker):

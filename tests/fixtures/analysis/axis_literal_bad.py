@@ -1,0 +1,14 @@
+"""BAD: collective axis names spelled as string literals."""
+import jax
+
+
+def combine(y):
+    return jax.lax.psum(y, "model")
+
+
+def grad_mean(g):
+    return jax.lax.pmean(g, axis_name=("pod", "data"))
+
+
+def local_rank():
+    return jax.lax.axis_index("data")

@@ -1,0 +1,16 @@
+"""GOOD: collective axis names come from the launch.mesh constants."""
+import jax
+
+from repro.launch.mesh import DATA_AXIS, MODEL_AXIS, POD_AXIS
+
+
+def combine(y):
+    return jax.lax.psum(y, MODEL_AXIS)
+
+
+def grad_mean(g):
+    return jax.lax.pmean(g, axis_name=(POD_AXIS, DATA_AXIS))
+
+
+def local_rank():
+    return jax.lax.axis_index(DATA_AXIS)

@@ -24,6 +24,7 @@ RULE_STEMS = {
     "host-sync": "host_sync",
     "obs-contract": "obs_contract",
     "prng-reuse": "prng_reuse",
+    "axis-name-literal": "axis_literal",
 }
 
 

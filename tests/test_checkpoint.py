@@ -54,3 +54,22 @@ def test_bn_state_and_meta_roundtrip(tmp_path):
 def test_missing_checkpoint_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         restore(str(tmp_path), {"w": jnp.zeros(())})
+
+
+def test_sharded_layout_roundtrip(tmp_path):
+    """save(sharded=True): per-process shard files with the global index
+    baked into each entry name; restore finds and reassembles them without
+    being told the layout. Single-process this is the degenerate one-file
+    case (the cross-geometry 4-device case lives in test_distributed.py)."""
+    tree = {"w": jnp.arange(12.0).reshape(3, 4), "step": jnp.int32(3),
+            "flag": np.float64(1.5)}
+    save(str(tmp_path), 3, tree, sharded=True)
+    assert (tmp_path / "params_3.shard0.npz").exists()
+    assert not (tmp_path / "params_3.npz").exists()
+    meta = load_meta(str(tmp_path))
+    assert meta["sharded"] is True and meta["num_processes"] == 1
+    restored, step = restore(str(tmp_path),
+                             jax.tree.map(jnp.zeros_like, tree))
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

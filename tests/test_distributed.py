@@ -1,0 +1,209 @@
+"""Multi-process execution: jax.distributed bring-up, the pod mesh, the
+per-shard checkpoint layout, and sweep sharding across processes.
+
+The CPU backend can build process-spanning meshes and create/checkpoint
+global arrays on them, but cannot run a computation across processes
+("Multiprocess computations aren't implemented on the CPU backend") — so
+the 2-process test computes on each host's local mesh and uses the pod
+mesh for global placement + sharded checkpointing, which is exactly the
+split `launch.mesh` documents for CPU-backend multi-process runs.
+
+Every subprocess here runs with JAX_PLATFORMS=cpu pinned and an explicit
+wait timeout: a hung coordinator handshake fails the test loudly instead
+of wedging the suite.
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+REPO = Path(__file__).resolve().parent.parent
+
+# generous for a cold jax import + 2-run sweep; a hung distributed init
+# would otherwise block forever
+SUBPROC_TIMEOUT_S = 600
+
+
+def _env(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # pin the platform: without it each process burns ~minutes probing for
+    # TPU metadata before falling back to CPU
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+CROSS_GEOMETRY_SCRIPT = textwrap.dedent("""
+    import glob, os, sys, tempfile
+    import jax, jax.numpy as jnp, numpy as np
+    assert jax.device_count() == 4, jax.device_count()
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import load_meta, restore, save
+    from repro.launch.mesh import make_2d_mesh, make_data_mesh
+
+    mesh = make_2d_mesh()
+    assert dict(mesh.shape) == {"data": 2, "model": 2}, mesh
+    w = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
+    tree = {
+        "w": jax.device_put(w, NamedSharding(mesh, P("data", "model"))),
+        "b": jax.device_put(jnp.arange(4.0), NamedSharding(mesh, P())),
+        "step": jnp.int32(3),
+    }
+    d = sys.argv[1]
+    save(d, 3, tree, sharded=True)
+    assert glob.glob(os.path.join(d, "params_3.shard0.npz"))
+    meta = load_meta(d)
+    assert meta["sharded"] is True and meta["num_processes"] == 1
+
+    # restore onto a DIFFERENT geometry: the 1-D (data=4,) mesh
+    dmesh = make_data_mesh()
+    assert dict(dmesh.shape) == {"data": 4}, dmesh
+    tmpl = jax.tree.map(jnp.zeros_like, tree)
+    sh = {"w": NamedSharding(dmesh, P("data", None)),
+          "b": NamedSharding(dmesh, P()),
+          "step": NamedSharding(dmesh, P())}
+    restored, step = restore(d, tmpl, shardings=sh)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert restored["w"].sharding.spec == P("data", None)
+    print("CKPT_GEO_OK")
+""")
+
+
+def test_ckpt_cross_geometry_subprocess(tmp_path):
+    """A checkpoint saved sharded on a (2 data, 2 model) mesh restores
+    bit-exact onto a (4,)-data mesh — the shard entries carry their global
+    index, so restore needs no knowledge of the saving geometry."""
+    proc = subprocess.run(
+        [sys.executable, "-c", CROSS_GEOMETRY_SCRIPT, str(tmp_path)],
+        capture_output=True, text=True, env=_env(4), cwd=str(REPO),
+        timeout=SUBPROC_TIMEOUT_S)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "CKPT_GEO_OK" in proc.stdout
+
+
+DISTRIBUTED_SCRIPT = textwrap.dedent("""
+    import dataclasses, sys
+    import numpy as np
+    coordinator, pid, workdir = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+
+    from repro.launch.mesh import (POD_AXIS, global_array, init_distributed,
+                                   make_local_mesh, make_pod_mesh)
+    init_distributed(coordinator_address=coordinator, num_processes=2,
+                     process_id=pid)
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    assert jax.process_count() == 2, jax.process_count()
+    assert jax.process_index() == pid
+    assert jax.device_count() == 4 and len(jax.local_devices()) == 2
+
+    # pod mesh spans both processes; shard a global array over the pod
+    # axis and checkpoint it — each process writes ONLY its own rows
+    pod = make_pod_mesh()
+    assert dict(pod.shape) == {"pod": 2, "data": 2, "model": 1}, pod
+    full = np.arange(4 * 3, dtype=np.float32).reshape(4, 3)
+    g = global_array(pod, full, P(POD_AXIS, None))
+    assert len(g.addressable_shards) == 2           # this host's rows only
+    from repro.checkpoint import save
+    save(workdir + "/ckpt", 1, {"w": g}, sharded=True)
+
+    # compute happens on the per-process local mesh (CPU backend cannot
+    # run cross-process computations): one LM train step end to end
+    from repro.configs.registry import get_config
+    from repro.core import LargeBatchConfig, Regime
+    from repro.models import transformer as T
+    from repro.optim import sgd
+    from repro.train.trainer import make_lm_train_step
+    local = make_local_mesh()
+    assert dict(local.shape) == {"data": 2, "model": 1}, local
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              dtype="float32", vocab_size=128)
+    lb = LargeBatchConfig(batch_size=4, base_batch_size=4, grad_clip=1.0)
+    regime = Regime(base_lr=0.02, total_steps=4, drop_every=2)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_lm_train_step(cfg, lb, regime, mesh=local,
+                                      params=params, fsdp=True))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    p, o, m = step(params, sgd.init(params), {"tokens": toks},
+                   jnp.int32(0), jax.random.PRNGKey(2))
+    assert float(m["loss"]) > 0
+
+    # sweep sharding: shard auto-detects (process_index, process_count);
+    # both shards append to the same shared store
+    from repro.experiments.registry import get_sweep
+    from repro.experiments.runner import run_sweep
+    sweep = get_sweep("diffusion", steps=4, batches=(32, 128))
+    recs = run_sweep(sweep, workdir + "/sweep",
+                     log_fn=lambda s: print(f"[p{pid}] {s}"))
+    print(f"P{pid}_RAN_{len(recs)}")
+    print(f"P{pid}_OK")
+""")
+
+
+def test_two_process_train_ckpt_sweep(tmp_path):
+    """2-process jax.distributed on CPU: pod mesh over processes, per-shard
+    checkpoint written by each process, one FSDP train step on each host's
+    local mesh, and a sweep sharded by run_id hash across the processes —
+    the shared store ends up with the full union of runs."""
+    port = _free_port()
+    coord = f"127.0.0.1:{port}"
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", DISTRIBUTED_SCRIPT, coord, str(i),
+             str(tmp_path)],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+            env=_env(2), cwd=str(REPO))
+        for i in range(2)]
+    outs = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=SUBPROC_TIMEOUT_S)
+            outs.append(out)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    for i, (p, out) in enumerate(zip(procs, outs)):
+        assert p.returncode == 0, f"process {i}:\n{out}"
+        assert f"P{i}_OK" in out, out
+
+    # both processes wrote their own checkpoint shard; assembly recovers
+    # the full pod-sharded array
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import restore
+    ckpt = tmp_path / "ckpt"
+    assert (ckpt / "params_1.shard0.npz").exists()
+    assert (ckpt / "params_1.shard1.npz").exists()
+    full = np.arange(4 * 3, dtype=np.float32).reshape(4, 3)
+    restored, step = restore(str(ckpt), {"w": jnp.zeros((4, 3))})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), full)
+
+    # the two sweep shards cover the whole sweep exactly once
+    from repro.experiments.registry import get_sweep
+    all_ids = {s.run_id for s in
+               get_sweep("diffusion", steps=4, batches=(32, 128)).expand()}
+    records = [json.loads(line) for line in
+               (tmp_path / "sweep" / "diffusion" / "records.jsonl")
+               .read_text().splitlines()]
+    got = [r["run_id"] for r in records]
+    assert sorted(got) == sorted(all_ids), (got, all_ids)

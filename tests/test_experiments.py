@@ -324,3 +324,41 @@ def test_lm_runner_path(tmp_path):
     assert len(recs) == 1
     assert np.isfinite(recs[0]["final_ce"])
     assert recs[0]["steps"] == 4
+
+
+def test_mesh_degradation_warns_once():
+    """A topology request the host can't honor emits one RuntimeWarning
+    naming both the requested and actual topology — once per (requested,
+    actual) pair, not once per run."""
+    from repro.experiments import runner
+    spec = _tiny_spec(use_mesh="2d")
+    runner._DEGRADE_WARNED.clear()
+    try:
+        with pytest.warns(RuntimeWarning, match="'2d'.*degrading"):
+            runner._mesh_for(spec)          # 1 device in-process
+        # second call for the same degradation is silent
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            runner._mesh_for(spec)
+    finally:
+        runner._DEGRADE_WARNED.clear()
+
+
+def test_sweep_shard_partition():
+    """_shard_owns partitions any run_id set exactly across shards, and is
+    a pure function of the run_id (adding runs never reshuffles the rest)."""
+    from repro.experiments.runner import _shard_owns
+    ids = [_tiny_spec(seed=s).run_id for s in range(8)]
+    for count in (2, 3):
+        owners = [[rid for rid in ids if _shard_owns(rid, i, count)]
+                  for i in range(count)]
+        flat = [r for o in owners for r in o]
+        assert sorted(flat) == sorted(ids)
+    assert _shard_owns(ids[0], 0, 2) == _shard_owns(ids[0], 0, 2)
+
+
+def test_run_sweep_shard_validation(tmp_path):
+    sweep = SweepSpec(name="tiny", base=_tiny_spec(total_steps=2))
+    with pytest.raises(ValueError, match="bad sweep shard"):
+        run_sweep(sweep, str(tmp_path), shard=(2, 2))
